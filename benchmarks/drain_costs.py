@@ -1,0 +1,45 @@
+"""§2.3.3: drain-required reconfiguration cost structure (C4/I3) and its
+rate across size distributions (the '~14 vs ~5 reconfigs' observation)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core.modes import (CKPT_LOAD_S, CKPT_SAVE_S, POD_CHURN_S,
+                              RECONFIGURE_S, ReconfigPlan)
+from repro.core.job import Job
+from repro.core.simulator import simulate
+from repro.core.traces import TraceCategory, generate_trace
+
+
+def run(seeds=(0, 1, 2)) -> dict:
+    out = {"reconfigure_s": RECONFIGURE_S,
+           "ckpt_s": CKPT_SAVE_S + CKPT_LOAD_S,
+           "pod_churn_s": POD_CHURN_S}
+    for sd in ("small", "balanced", "large"):
+        counts = []
+        for seed in seeds:
+            jobs = generate_trace(
+                TraceCategory("philly", sd, "train"), seed=seed,
+                double=True, max_size=4)
+            counts.append(simulate(jobs, "DM").n_reconfigs)
+        out[f"reconfigs_{sd}"] = float(np.mean(counts))
+    j = Job("x", "bert-base", "train", 2, 32, 1000.0)
+    plan = ReconfigPlan(0, 0, j, ("a", "b"))
+    out["example_drain_s"] = plan.duration
+    return out
+
+
+def main() -> None:
+    us = time_fn(lambda: run(seeds=(0,)), warmup=0, iters=1)
+    o = run()
+    emit("drain_costs", us,
+         f"reconfigure_s={o['reconfigure_s']:.0f};"
+         f"2job_drain_s={o['example_drain_s']:.0f};"
+         f"reconfigs_small={o['reconfigs_small']:.1f};"
+         f"reconfigs_balanced={o['reconfigs_balanced']:.1f};"
+         f"reconfigs_large={o['reconfigs_large']:.1f}")
+
+
+if __name__ == "__main__":
+    main()

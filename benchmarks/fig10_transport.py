@@ -1,0 +1,43 @@
+"""Fig. 10: one-to-one vs one-to-many at size 2, SHM/NET x SAME/DIFF,
+solo (a) and under concurrency (b)."""
+from __future__ import annotations
+
+from benchmarks.common import emit, time_fn
+from repro.core.jct_model import PlacementView, iteration_time
+
+CONFIGS = {
+    "one2one_2g": PlacementView(("2g.10gb",), (1,), "NONE", sm_slices=2),
+    "SHM-SAME": PlacementView(("1g.5gb",) * 2, (2,), "SHM"),
+    "SHM-DIFF": PlacementView(("1g.5gb",) * 2, (1, 1), "SHM"),
+    "NET-DIFF": PlacementView(("1g.5gb",) * 2, (1, 1), "NET"),
+}
+
+
+def run(model: str, batch: int, *, net_jobs: int = 1) -> dict:
+    out = {}
+    for name, view in CONFIGS.items():
+        if view.transport == "NET":
+            view = PlacementView(view.instance_types,
+                                 view.leaves_per_gpu, "NET",
+                                 concurrent_net_jobs=net_jobs)
+        out[name] = iteration_time(model, batch, view, train=True)
+    base = out["one2one_2g"]
+    return {k: v / base for k, v in out.items()}
+
+
+def main() -> None:
+    us = time_fn(lambda: run("bert-base", 32), warmup=0, iters=3)
+    for model, batch in (("mobilenetv3-large", 128),
+                         ("efficientnet-b2", 64),
+                         ("distilbert", 32), ("bert-base", 16)):
+        solo = run(model, batch, net_jobs=1)
+        busy = run(model, batch, net_jobs=6)
+        emit(f"fig10a_{model}", us,
+             ";".join(f"{k}={v:.3f}" for k, v in solo.items()))
+        emit(f"fig10b_{model}", us,
+             f"SHM-SAME={busy['SHM-SAME']:.3f};"
+             f"NET-DIFF_busy={busy['NET-DIFF']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

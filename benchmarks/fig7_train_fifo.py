@@ -1,0 +1,54 @@
+"""Fig. 7: FM vs DM vs SM under FIFO, training-only, max size 4."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core.metrics import ModeComparison, summarize
+from repro.core.simulator import simulate
+from repro.core.traces import DURATION_SOURCES, TraceCategory, \
+    generate_trace
+
+
+def run(seeds=(0, 1, 2)) -> dict:
+    out = {}
+    for size_dist in ("small", "balanced", "large"):
+        fm_dm, fm_sm = [], []
+        reconfigs = []
+        frag = []
+        for src in DURATION_SOURCES:
+            for seed in seeds:
+                cat = TraceCategory(src, size_dist, "train")
+                jobs = generate_trace(cat, seed=seed, double=True,
+                                      max_size=4)
+                fm = simulate(jobs, "FM", policy="fifo")
+                dm = simulate(jobs, "DM", policy="fifo")
+                sm = simulate(jobs, "SM", policy="fifo")
+                fm_dm.append(ModeComparison.of(fm, dm))
+                fm_sm.append(ModeComparison.of(fm, sm))
+                reconfigs.append(dm.n_reconfigs)
+                frag.append(dm.avg_ext_frag_delay * len(jobs)
+                            / max(dm.makespan, 1e-9))
+        out[size_dist] = {
+            "fm_dm": summarize(fm_dm),
+            "fm_sm": summarize(fm_sm),
+            "dm_reconfigs_mean": float(np.mean(reconfigs)),
+            "dm_frag_frac": float(np.mean(frag)),
+        }
+    return out
+
+
+def main() -> None:
+    us = time_fn(lambda: run(seeds=(0,)), warmup=0, iters=1)
+    out = run()
+    for sd, o in out.items():
+        emit(f"fig7_{sd}", us / 3,
+             f"FMvDM_makespan={o['fm_dm']['makespan_ratio_mean']:.3f};"
+             f"FMvDM_wait={o['fm_dm']['wait_ratio_mean']:.3f};"
+             f"FMvDM_jct={o['fm_dm']['jct_ratio_mean']:.3f};"
+             f"FMvSM_makespan={o['fm_sm']['makespan_ratio_mean']:.3f};"
+             f"dm_reconfigs={o['dm_reconfigs_mean']:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Fig. 9: normalized JCT of size-6 workloads vs physical placement split
+(3-3 ... 6-0) — the evidence behind topology-aware placement."""
+from __future__ import annotations
+
+from benchmarks.common import emit, time_fn
+from repro.core.jct_model import PlacementView, iteration_time
+
+SPLITS = [(3, 3), (4, 2), (5, 1), (6, 0)]
+
+
+def run(model: str = "bert-base", batch: int = 32) -> dict:
+    times = {}
+    for split in SPLITS:
+        per = tuple(s for s in split if s > 0)
+        v = PlacementView(("1g.5gb",) * 6, per, "SHM")
+        times[f"{split[0]}-{split[1]}"] = iteration_time(
+            model, batch, v, train=True)
+    base = times["3-3"]
+    return {k: t / base for k, t in times.items()}
+
+
+def main() -> None:
+    us = time_fn(lambda: run(), warmup=0, iters=3)
+    for model in ("efficientnet-b2", "distilbert", "bert-base",
+                  "t5-small"):
+        norm = run(model)
+        emit(f"fig9_{model}", us,
+             ";".join(f"{k}={v:.3f}" for k, v in norm.items()))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Kernel microbenchmarks (interpret mode on CPU: correctness-path timing;
+the derived column reports kernel-vs-jnp-ref output agreement)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.mamba_scan.ops import ssd
+from repro.kernels.mamba_scan.ref import ssd_ref
+from repro.kernels.mlstm.ops import mlstm
+from repro.kernels.mlstm.ref import mlstm_ref
+from repro.kernels.rmsnorm.ops import rmsnorm
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+
+def main() -> None:
+    ks = jax.random.split(jax.random.key(0), 5)
+
+    B, S, H, Kv, D = 1, 256, 4, 2, 64
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, Kv, D))
+    v = jax.random.normal(ks[2], (B, S, Kv, D))
+    f = jax.jit(lambda q, k, v: flash_attention(
+        q, k, v, causal=True, block_q=64, block_k=64))
+    us = time_fn(lambda: jax.block_until_ready(f(q, k, v)))
+    err = float(jnp.max(jnp.abs(
+        f(q, k, v) - attention_ref(q, k, v, causal=True))))
+    emit("kernel_flash_attention", us, f"max_err_vs_ref={err:.2e}")
+
+    T, Hh, P, G, N = 256, 2, 32, 1, 16
+    x = jax.random.normal(ks[0], (B, T, Hh, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, Hh)))
+    A = -jnp.exp(jax.random.normal(ks[2], (Hh,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, T, G, N))
+    Cm = jax.random.normal(ks[4], (B, T, G, N))
+    g = jax.jit(lambda *a: ssd(*a, chunk=64))
+    us = time_fn(lambda: jax.block_until_ready(g(x, dt, A, Bm, Cm)[0]))
+    err = float(jnp.max(jnp.abs(
+        g(x, dt, A, Bm, Cm)[0] - ssd_ref(x, dt, A, Bm, Cm)[0])))
+    emit("kernel_mamba_scan", us, f"max_err_vs_ref={err:.2e}")
+
+    Dm = 32
+    qm = jax.random.normal(ks[0], (B, T, Hh, Dm))
+    km = jax.random.normal(ks[1], (B, T, Hh, Dm))
+    vm = jax.random.normal(ks[2], (B, T, Hh, Dm))
+    ir = jax.random.normal(ks[3], (B, T, Hh)) * 2
+    fr = jax.random.normal(ks[4], (B, T, Hh)) * 2 + 3
+    h = jax.jit(lambda *a: mlstm(*a, chunk=64))
+    us = time_fn(lambda: jax.block_until_ready(
+        h(qm, km, vm, ir, fr)[0]))
+    err = float(jnp.max(jnp.abs(
+        h(qm, km, vm, ir, fr)[0] - mlstm_ref(qm, km, vm, ir, fr)[0])))
+    emit("kernel_mlstm", us, f"max_err_vs_ref={err:.2e}")
+
+    xr = jax.random.normal(ks[0], (512, 768), jnp.bfloat16)
+    wr = jnp.ones((768,), jnp.float32)
+    r = jax.jit(rmsnorm)
+    us = time_fn(lambda: jax.block_until_ready(r(xr, wr)))
+    err = float(jnp.max(jnp.abs(
+        (r(xr, wr) - rmsnorm_ref(xr, wr)).astype(jnp.float32))))
+    emit("kernel_rmsnorm", us, f"max_err_vs_ref={err:.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Roofline table: reads artifacts/dryrun/*.json (written by
+repro.launch.dryrun) and prints the per-cell three-term analysis."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from benchmarks.common import emit
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_cells(art_dir: Optional[str] = None,
+               mesh: str = "16x16", tag: str = "") -> List[Dict]:
+    cells = []
+    for fn in sorted(glob.glob(os.path.join(art_dir or ART, "*.json"))):
+        with open(fn) as f:
+            meta = json.load(f)
+        parts = os.path.basename(fn)[:-5].split("__")
+        cell_tag = parts[3] if len(parts) > 3 else ""
+        if meta.get("mesh") != mesh or cell_tag != tag:
+            continue
+        cells.append(meta)
+    return cells
+
+
+def fraction(meta: Dict) -> float:
+    """Roofline fraction: useful-compute time / dominant-term time."""
+    r = meta["roofline"]
+    useful_s = (meta["model_flops"] / meta["n_chips"]) / 197e12
+    return useful_s / max(r["bound_s"], 1e-12)
+
+
+def main() -> None:
+    cells = load_cells()
+    if not cells:
+        emit("roofline", 0.0, "no_dryrun_artifacts_found")
+        return
+    for meta in cells:
+        if meta.get("status") == "skipped":
+            emit(f"roofline_{meta['arch']}_{meta['shape']}", 0.0,
+                 "skipped")
+            continue
+        if meta.get("status") != "ok":
+            emit(f"roofline_{meta['arch']}_{meta['shape']}", 0.0,
+                 f"error={meta.get('error', '?')[:60]}")
+            continue
+        r = meta["roofline"]
+        emit(f"roofline_{meta['arch']}_{meta['shape']}",
+             r["bound_s"] * 1e6,
+             f"dom={r['dominant']};"
+             f"compute_s={r['compute_s']:.4f};"
+             f"memory_s={r['memory_s']:.4f};"
+             f"collective_s={r['collective_s']:.4f};"
+             f"useful_ratio={r['useful_ratio']:.3f};"
+             f"roofline_frac={fraction(meta):.4f};"
+             f"fits16GB={meta['memory']['fits_16gb']}")
+
+
+if __name__ == "__main__":
+    main()

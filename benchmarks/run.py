@@ -1,0 +1,45 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Roofline rows read the dry-run
+artifacts (run ``python -m repro.launch.dryrun --all --both-meshes``
+first for the full table).
+"""
+from __future__ import annotations
+
+import traceback
+
+from benchmarks import (drain_costs, fig6_parity, fig7_train_fifo,
+                        fig8_mixed_backfill, fig9_placement,
+                        fig10_transport, fig11_allreduce_bw,
+                        kernel_bench, roofline, table1_workloads)
+
+MODULES = [
+    ("table1_workloads", table1_workloads),
+    ("drain_costs", drain_costs),
+    ("fig6_parity", fig6_parity),
+    ("fig7_train_fifo", fig7_train_fifo),
+    ("fig8_mixed_backfill", fig8_mixed_backfill),
+    ("fig9_placement", fig9_placement),
+    ("fig10_transport", fig10_transport),
+    ("fig11_allreduce_bw", fig11_allreduce_bw),
+    ("kernel_bench", kernel_bench),
+    ("roofline", roofline),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in MODULES:
+        try:
+            mod.main()
+        except Exception as e:                 # noqa: BLE001
+            failures += 1
+            print(f"{name},0.0,ERROR:{type(e).__name__}:{e}")
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} benchmark modules failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Table 1-driven job-level measurements: the size-aware prioritization
+evidence (1g.10gb 10-30% faster for size-1; no benefit when mixed)."""
+from __future__ import annotations
+
+from benchmarks.common import emit, time_fn
+from repro.core.jct_model import (WORKLOADS, PlacementView,
+                                  iteration_time)
+
+
+def run() -> dict:
+    out = {}
+    for name in WORKLOADS:
+        t5 = iteration_time(name, 64, PlacementView(
+            ("1g.5gb",), (1,), "NONE"), train=True)
+        t10 = iteration_time(name, 64, PlacementView(
+            ("1g.10gb",), (1,), "NONE"), train=True)
+        pure = iteration_time(name, 64, PlacementView(
+            ("1g.5gb",) * 2, (1, 1), "SHM"), train=True)
+        mixed = iteration_time(name, 64, PlacementView(
+            ("1g.5gb", "1g.10gb"), (1, 1), "SHM"), train=True)
+        out[name] = {"boost_10gb": t5 / t10, "mixed_gain": pure / mixed}
+    return out
+
+
+def main() -> None:
+    us = time_fn(run, warmup=0, iters=3)
+    for name, o in run().items():
+        emit(f"table1_{name}", us,
+             f"size1_10gb_speedup={o['boost_10gb']:.3f};"
+             f"mixed_vs_pure={o['mixed_gain']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Render the §Perf iteration tables from tagged dry-run artifacts."""
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+PAIRS = {
+    "Pair A — llama3.2-1b train_4k @ 16x16": [
+        ("llama3.2-1b__train_4k__16x16", "baseline (FSDP, accum 4)"),
+        ("llama3.2-1b__train_4k__16x16__zero1", "+ZeRO-1 (no FSDP)"),
+        ("llama3.2-1b__train_4k__16x16__accum1", "accum 1 only"),
+        ("llama3.2-1b__train_4k__16x16__zero1_accum1",
+         "+ZeRO-1 +accum 1"),
+        ("llama3.2-1b__train_4k__16x16__zero1_accum1_sp",
+         "+ZeRO-1 +accum 1 +SP"),
+        ("llama3.2-1b__train_4k__16x16__zero1_accum1_sp_pbf16",
+         "+ZeRO-1 +accum 1 +SP +bf16-p"),
+    ],
+    "Pair B — command-r-plus-104b train_4k @ 16x16": [
+        ("command-r-plus-104b__train_4k__16x16", "baseline (accum 16)"),
+        ("command-r-plus-104b__train_4k__16x16__sp", "+SP"),
+        ("command-r-plus-104b__train_4k__16x16__sp_accum8",
+         "+SP, accum 8"),
+        ("command-r-plus-104b__train_4k__16x16__sp_accum4",
+         "+SP, accum 4"),
+        ("command-r-plus-104b__train_4k__16x16__sp_accum8_pbf16",
+         "+SP, accum 8, +bf16-p"),
+        ("command-r-plus-104b__train_4k__16x16__sp_nomaster",
+         "+SP, bf16-master AdamW (fits!)"),
+        ("command-r-plus-104b__train_4k__16x16__sp_accum32",
+         "counter-probe: accum 32"),
+    ],
+    "Pair C — llama-3.2-vision-90b train_4k @ 2x16x16": [
+        ("llama-3.2-vision-90b__train_4k__2x16x16", "baseline (accum 8)"),
+        ("llama-3.2-vision-90b__train_4k__2x16x16__sp", "+SP"),
+        ("llama-3.2-vision-90b__train_4k__2x16x16__mediapin",
+         "+media sharding pin"),
+        ("llama-3.2-vision-90b__train_4k__2x16x16__mediapin_sp",
+         "+media pin +SP"),
+        ("llama-3.2-vision-90b__train_4k__2x16x16__comp",
+         "int8 cross-pod grads (XLA-blocked)"),
+    ],
+}
+
+
+def main():
+    for title, rows in PAIRS.items():
+        print(f"\n#### {title}\n")
+        print("| iteration | compute s | memory s | collective s "
+              "| cross-pod s | bound s | vs base | mem GB | fits |")
+        print("|---|---|---|---|---|---|---|---|---|")
+        base = None
+        for stem, label in rows:
+            fn = os.path.join(ART, stem + ".json")
+            if not os.path.exists(fn):
+                print(f"| {label} | (missing) | | | | | | | |")
+                continue
+            m = json.load(open(fn))
+            if m.get("status") != "ok":
+                err = m.get("error", "?")[:60].replace("|", "/")
+                print(f"| {label} | FAILED: {err} | | | | | | | |")
+                continue
+            r = m["roofline"]
+            if base is None:
+                base = r["bound_s"]
+            mem = m["memory"]["peak_estimate_bytes"] / 1e9
+            fits = "Y" if m["memory"]["fits_16gb"] else "N"
+            print(f"| {label} | {r['compute_s']:.1f} "
+                  f"| {r['memory_s']:.1f} | {r['collective_s']:.1f} "
+                  f"| {r.get('cross_pod_s', 0):.1f} "
+                  f"| **{r['bound_s']:.1f}** "
+                  f"| {base / r['bound_s']:.2f}x | {mem:.1f} | {fits} |")
+
+
+if __name__ == "__main__":
+    main()

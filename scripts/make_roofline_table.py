@@ -1,0 +1,66 @@
+"""Render the EXPERIMENTS.md roofline/dry-run tables from artifacts."""
+import glob
+import json
+import os
+import sys
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCH_ORDER = ["whisper-tiny", "llama-3.2-vision-90b",
+              "command-r-plus-104b", "glm4-9b", "stablelm-1.6b",
+              "llama3.2-1b", "qwen2-moe-a2.7b", "deepseek-v2-lite-16b",
+              "zamba2-1.2b", "xlstm-125m"]
+
+
+def load(mesh, tag=""):
+    out = {}
+    for fn in glob.glob(os.path.join(ART, "*.json")):
+        parts = os.path.basename(fn)[:-5].split("__")
+        if len(parts) < 3:
+            continue
+        arch, shape, m = parts[0], parts[1], parts[2]
+        t = parts[3] if len(parts) > 3 else ""
+        if m != mesh or t != tag:
+            continue
+        with open(fn) as f:
+            out[(arch, shape)] = json.load(f)
+    return out
+
+
+def fraction(meta):
+    useful_s = (meta["model_flops"] / meta["n_chips"]) / 197e12
+    return useful_s / max(meta["roofline"]["bound_s"], 1e-12)
+
+
+def table(mesh, tag=""):
+    cells = load(mesh, tag)
+    print(f"\n### mesh {mesh}{' tag=' + tag if tag else ''}\n")
+    print("| arch | shape | status | mem GB | fits | compute s | "
+          "memory s | collective s | dominant | useful | RL frac |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            meta = cells.get((arch, shape))
+            if meta is None:
+                continue
+            if meta.get("status") == "skipped":
+                print(f"| {arch} | {shape} | skipped (sub-quadratic-only"
+                      f" shape) | | | | | | | | |")
+                continue
+            if meta.get("status") != "ok":
+                print(f"| {arch} | {shape} | ERROR | | | | | | | | |")
+                continue
+            r = meta["roofline"]
+            m = meta["memory"]
+            print(f"| {arch} | {shape} | ok "
+                  f"| {m['peak_estimate_bytes']/1e9:.1f} "
+                  f"| {'Y' if m['fits_16gb'] else 'N'} "
+                  f"| {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+                  f"| {r['collective_s']:.3f} | {r['dominant']} "
+                  f"| {r['useful_ratio']:.2f} | {fraction(meta):.4f} |")
+
+
+if __name__ == "__main__":
+    table("16x16")
+    table("2x16x16")

@@ -1,0 +1,53 @@
+"""Gradient compression for the slow (cross-pod / NET) hop.
+
+int8 block quantization with per-tensor scale: the cross-pod all-reduce is
+implemented as all_gather(int8) + local dequantize-mean, cutting slow-axis
+bytes 4x vs f32 (2x vs bf16).  Error feedback (residual carrying) keeps the
+quantization noise unbiased across steps.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x) -> Tuple[jax.Array, jax.Array]:
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum_mean(x, axis: str, *, bits: int = 8):
+    """Mean-reduce ``x`` over mesh axis ``axis`` with compressed transport.
+
+    Runs inside shard_map.  bits=16 casts to bf16 (psum native); bits=8
+    all_gathers int8 + per-shard scales and averages locally.
+    """
+    n = jax.lax.axis_size(axis)
+    if bits == 16:
+        y = jax.lax.psum(x.astype(jnp.bfloat16), axis)
+        return (y.astype(jnp.float32) / n).astype(x.dtype)
+    assert bits == 8, bits
+    q, scale = quantize_int8(x)
+    qs = jax.lax.all_gather(q, axis, axis=0, tiled=False)      # (n, ...)
+    ss = jax.lax.all_gather(scale, axis, axis=0, tiled=False)  # (n,)
+    deq = qs.astype(jnp.float32) * ss.reshape((n,) + (1,) * x.ndim)
+    return (jnp.sum(deq, axis=0) / n).astype(x.dtype)
+
+
+def apply_error_feedback(grad, residual: Optional[jax.Array], *,
+                         bits: int = 8):
+    """Returns (compressed-representable grad, new residual)."""
+    g = grad.astype(jnp.float32)
+    if residual is not None:
+        g = g + residual.astype(jnp.float32)
+    q, scale = quantize_int8(g)
+    gq = dequantize_int8(q, scale)
+    return gq.astype(grad.dtype), (g - gq).astype(jnp.float32)

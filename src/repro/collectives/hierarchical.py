@@ -1,0 +1,98 @@
+"""Two-level ("SHM-first") collectives — the paper's runtime insight on TPU.
+
+Flex-MIG's SHM collectives exploit the intra-host fast path between leaves;
+on TPU the same two-tier bandwidth cliff separates intra-pod ICI
+(~50 GB/s/link) from cross-pod DCN.  These shard_map collectives implement
+the hierarchical schedule explicitly:
+
+    all_reduce  = reduce_scatter(fast axis)
+                -> all_reduce(slow axis, optionally compressed)
+                -> all_gather(fast axis)
+
+which moves only 1/F of the tensor across the slow boundary (F = fast-axis
+size) instead of the whole tensor — exactly the paper's "keep bulk traffic
+on SHM, not NET" principle.  Measured in lowered-HLO collective bytes by
+benchmarks/fig11_allreduce_bw.py and used by the train step's
+``cross_pod_grad_mode='hier*'`` paths.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.collectives.compression import compressed_psum_mean
+
+
+def _flat_psum_scatter(x, axis):
+    """reduce-scatter along leading dim over ``axis`` (pads if needed)."""
+    n = jax.lax.axis_size(axis)
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % n
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return jax.lax.psum_scatter(flat.reshape(n, -1), axis,
+                                scatter_dimension=0, tiled=False), pad
+
+
+def hier_all_reduce_mean(x, *, fast_axis: str, slow_axis: Optional[str],
+                         compress_bits: int = 0):
+    """Hierarchical mean all-reduce inside a shard_map body.
+
+    fast_axis: intra-pod axis (ICI / 'SHM'); slow_axis: cross-pod ('NET').
+    compress_bits: 0 (full precision) | 16 (bf16) | 8 (int8+scale) for the
+    slow hop only.
+    """
+    nf = jax.lax.axis_size(fast_axis)
+    shard, pad = _flat_psum_scatter(x, fast_axis)      # fast reduce-scatter
+    if slow_axis is not None:
+        if compress_bits:
+            shard = compressed_psum_mean(shard, slow_axis,
+                                         bits=compress_bits)
+        else:
+            ns = jax.lax.axis_size(slow_axis)
+            shard = jax.lax.psum(shard, slow_axis) / ns
+    full = jax.lax.all_gather(shard, fast_axis, axis=0,
+                              tiled=False)             # fast all-gather
+    flat = full.reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return (flat / nf).reshape(x.shape)
+
+
+def flat_all_reduce_mean(x, *, axes: Tuple[str, ...]):
+    """Baseline: single-level psum over all axes (the 'NET-everything'
+    schedule the paper's stock-NCCL workaround forces)."""
+    n = 1
+    for ax in axes:
+        n *= jax.lax.axis_size(ax)
+    return jax.lax.psum(x, axes) / n
+
+
+def make_hier_all_reduce(mesh: Mesh, *, fast_axis: str = "data",
+                         slow_axis: Optional[str] = "pod",
+                         compress_bits: int = 0, flat: bool = False):
+    """jit-able tensor-level hierarchical all-reduce over a mesh.
+
+    Input is expected replicated over 'model' and sharded/replicated over
+    (pod, fast) as P() — each (pod, data) cell holds its local copy.
+    """
+    axes = tuple(a for a in (fast_axis, slow_axis) if a in mesh.axis_names)
+    slow = slow_axis if (slow_axis and slow_axis in mesh.axis_names) \
+        else None
+
+    def fn(x):
+        if flat:
+            return flat_all_reduce_mean(x, axes=axes)
+        return hier_all_reduce_mean(x, fast_axis=fast_axis, slow_axis=slow,
+                                    compress_bits=compress_bits)
+
+    return jax.jit(jax.shard_map(
+        fn, mesh=mesh,
+        in_specs=P(axes),           # distinct value per (pod,data) cell
+        out_specs=P(axes),          # mean broadcast back to every cell
+        check_vma=False,
+        axis_names=set(axes)))

@@ -1,0 +1,24 @@
+"""command-r-plus-104b — dense GQA transformer with parallel attn||FFN blocks.
+
+[hf:CohereForAI/c4ai-command-r-v01 (plus-scale); unverified]  64L,
+d_model=12288, 96H (GQA kv=8), d_ff=33792, vocab=256000, no biases, parallel
+residual block, LayerNorm (cohere style), tied embeddings.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="command-r-plus-104b",
+    family="dense",
+    n_layers=64,
+    d_model=12288,
+    n_heads=96,
+    n_kv_heads=8,
+    d_ff=33792,
+    vocab_size=256000,
+    rope_theta=75000000.0,
+    norm="layernorm",
+    parallel_block=True,
+    tie_embeddings=True,
+    sub_quadratic=False,
+    source="hf:CohereForAI/c4ai-command-r-v01; unverified",
+)

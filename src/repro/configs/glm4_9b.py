@@ -1,0 +1,22 @@
+"""glm4-9b — dense GQA transformer, RoPE, kv=2.
+
+[hf:THUDM/glm-4-9b; hf]  40L, d_model=4096, 32H (GQA kv=2), d_ff=13696,
+vocab=151552.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="glm4-9b",
+    family="dense",
+    n_layers=40,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=2,
+    d_ff=13696,
+    vocab_size=151552,
+    rope_theta=10000.0,
+    rope_fraction=0.5,           # glm applies rope to half the head dim
+    qkv_bias=True,
+    sub_quadratic=False,
+    source="hf:THUDM/glm-4-9b; hf",
+)

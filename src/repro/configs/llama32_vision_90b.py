@@ -1,0 +1,26 @@
+"""llama-3.2-vision-90b — VLM decoder with interleaved cross-attn image layers.
+
+[hf:meta-llama/Llama-3.2-11B-Vision (scaled); unverified]  100L total,
+d_model=8192, 64H (GQA kv=8), d_ff=28672, vocab=128256.  Every 5th layer is a
+cross-attention layer over stubbed patch embeddings (20 cross + 80 self,
+mirroring the 11B's 1:4 ratio).  The vision tower is a STUB: ``input_specs()``
+provides precomputed patch embeddings.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="llama-3.2-vision-90b",
+    family="vlm",
+    n_layers=100,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=28672,
+    vocab_size=128256,
+    rope_theta=500000.0,
+    cross_every=5,
+    n_media_tokens=1024,
+    frontend="patch",
+    sub_quadratic=False,
+    source="hf:meta-llama/Llama-3.2-11B-Vision; unverified",
+)

@@ -1,0 +1,22 @@
+"""stablelm-1.6b — dense MHA transformer with partial RoPE.
+
+[hf:stabilityai/stablelm-2-1_6b; unverified]  24L, d_model=2048, 32H (kv=32,
+i.e. MHA), d_ff=5632, vocab=100352, 25% partial rotary, LayerNorm.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="stablelm-1.6b",
+    family="dense",
+    n_layers=24,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=5632,
+    vocab_size=100352,
+    rope_fraction=0.25,
+    norm="layernorm",
+    qkv_bias=True,
+    sub_quadratic=False,
+    source="hf:stabilityai/stablelm-2-1_6b; unverified",
+)

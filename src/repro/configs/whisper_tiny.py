@@ -1,0 +1,29 @@
+"""whisper-tiny — encoder-decoder ASR backbone (conv audio frontend stubbed).
+
+[arXiv:2212.04356; unverified]  4L enc + 4L dec, d_model=384, 6H (kv=6),
+d_ff=1536, vocab=51865.  The conv frontend is a STUB: ``input_specs()``
+provides precomputed mel-frame embeddings of length 1500.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="whisper-tiny",
+    family="encdec",
+    n_layers=4,                  # decoder layers
+    n_enc_layers=4,
+    d_model=384,
+    n_heads=6,
+    n_kv_heads=6,
+    d_ff=1536,
+    vocab_size=51865,
+    use_rope=False,              # whisper uses learned/sinusoidal positions
+    norm="layernorm",
+    act="gelu",
+    qkv_bias=True,
+    tie_embeddings=True,
+    is_encdec=True,
+    enc_seq_len=1500,
+    frontend="audio",
+    sub_quadratic=False,
+    source="arXiv:2212.04356; unverified",
+)

@@ -1,0 +1,49 @@
+"""Job and placement records shared by the orchestration layer."""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+from repro.core.leaves import Instance
+
+
+@dataclasses.dataclass
+class Job:
+    job_id: str
+    model: str                    # Table-1 workload name
+    kind: str                     # "train" | "inference"
+    size: int                     # workload size (leaves / slices)
+    batch: int
+    base_duration: float          # JCT on the reference placement (seconds)
+    submit_time: float = 0.0
+
+    # runtime bookkeeping
+    start_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    suspended_overhead: float = 0.0
+    ckpt_bytes: float = 0.0
+
+    @property
+    def train(self) -> bool:
+        return self.kind == "train"
+
+
+@dataclasses.dataclass
+class Placement:
+    job_id: str
+    instances: List[Instance]
+    transport: str                # "SHM" | "NET" | "NONE"
+    one_to_one: bool = False
+
+    def instance_types(self) -> Tuple[str, ...]:
+        return tuple(i.profile for i in self.instances)
+
+    def leaves_per_gpu(self) -> Tuple[int, ...]:
+        counts = {}
+        for inst in self.instances:
+            key = (inst.host_id, inst.gpu_id)
+            counts[key] = counts.get(key, 0) + 1
+        return tuple(counts.values())
+
+    def hosts(self) -> Tuple[int, ...]:
+        return tuple(sorted({i.host_id for i in self.instances}))

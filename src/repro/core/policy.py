@@ -1,0 +1,80 @@
+"""Flex-MIG instance-selection policy (§3.2).
+
+Two heuristics:
+1. *Size-aware instance prioritization* — ``1g.10gb`` for size-1 jobs
+   (10-30% JCT win), ``1g.5gb`` for size>=2 (sync caps at the slowest leaf,
+   so the bigger-memory leaf is wasted there).
+2. *Topology-aware placement* — round-robin leaves across physical GPUs of
+   the host (uneven packing saturates a single GPU's PCIe interface, Fig 9).
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+from repro.core.leaves import Cluster, Instance
+
+
+def size_aware_priority(size: int) -> List[str]:
+    """Preferred instance types, best first."""
+    if size == 1:
+        return ["1g.10gb", "1g.5gb"]
+    return ["1g.5gb", "1g.10gb"]
+
+
+def select_instances(cluster: Cluster, host: int, size: int,
+                     *, round_robin: bool = True) -> Optional[List[Instance]]:
+    """Pick ``size`` idle leaves on ``host`` under the §3.2 policy.
+
+    Returns None if the host lacks idle leaves.  ``round_robin=False``
+    reproduces the naive pack-one-GPU-first policy (Fig. 9 ablation).
+    """
+    prefs = size_aware_priority(size)
+    # idle leaves per gpu, preferred types first within a gpu
+    per_gpu: List[List[Instance]] = []
+    for gpu in cluster.host_gpus(host):
+        idle = [i for i in gpu.instances if not i.busy
+                and i.profile in prefs]
+        idle.sort(key=lambda i: prefs.index(i.profile))
+        per_gpu.append(idle)
+
+    total_idle = sum(len(g) for g in per_gpu)
+    if total_idle < size:
+        return None
+
+    chosen: List[Instance] = []
+    if round_robin:
+        # breadth-first across GPUs -> most even leaves_per_gpu split
+        cursors = [0] * len(per_gpu)
+        while len(chosen) < size:
+            progressed = False
+            for g, idle in enumerate(per_gpu):
+                if len(chosen) == size:
+                    break
+                if cursors[g] < len(idle):
+                    chosen.append(idle[cursors[g]])
+                    cursors[g] += 1
+                    progressed = True
+            if not progressed:
+                return None
+        if size == 1:
+            # size-aware prioritization dominates placement for size 1
+            all_idle = [i for g in per_gpu for i in g]
+            all_idle.sort(key=lambda i: prefs.index(i.profile))
+            chosen = [all_idle[0]]
+    else:
+        for idle in per_gpu:
+            for inst in idle:
+                if len(chosen) == size:
+                    break
+                chosen.append(inst)
+    return chosen if len(chosen) == size else None
+
+
+def choose_host(cluster: Cluster, size: int) -> Optional[int]:
+    """Pick the host with the most idle leaves that can fit the job."""
+    best, best_idle = None, -1
+    for h in range(cluster.n_hosts):
+        idle = len(cluster.idle_instances(host=h))
+        if idle >= size and idle > best_idle:
+            best, best_idle = h, idle
+    return best

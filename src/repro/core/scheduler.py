@@ -1,0 +1,45 @@
+"""Wait queue + scheduling policies (§4.1.1, §5.1).
+
+FIFO examines only the queue head; Aggressive Backfilling examines up to
+``depth`` candidates (14 in the paper's configuration) and places any that
+fit.  The scheduler is mode-agnostic: modes answer placement queries.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from repro.core.job import Job
+
+
+@dataclasses.dataclass
+class WaitQueue:
+    jobs: List[Job] = dataclasses.field(default_factory=list)
+
+    def push(self, job: Job) -> None:
+        self.jobs.append(job)
+
+    def remove(self, job: Job) -> None:
+        self.jobs.remove(job)
+
+    def __len__(self) -> int:
+        return len(self.jobs)
+
+    def __bool__(self) -> bool:
+        return bool(self.jobs)
+
+
+class Scheduler:
+    """policy='fifo' | 'backfill'."""
+
+    def __init__(self, policy: str = "fifo", depth: int = 14):
+        assert policy in ("fifo", "backfill")
+        self.policy = policy
+        self.depth = depth
+
+    def candidates(self, queue: WaitQueue) -> List[Job]:
+        if not queue:
+            return []
+        if self.policy == "fifo":
+            return [queue.jobs[0]]
+        return queue.jobs[:self.depth]

@@ -1,0 +1,278 @@
+"""Calibrated discrete-event simulator (§5: the paper's evaluation vehicle).
+
+Replays a trace of jobs against a cluster under one of the three operation
+modes (FM/DM/SM) and a scheduling policy (FIFO / aggressive backfilling),
+charging the paper's measured cost structure: placement-dependent JCT
+scaling (core/jct_model.py), drain-required reconfiguration (C4) with
+checkpoint save/load + pod churn, and the x1.06 concurrency calibration.
+
+``ground_truth=True`` turns the simulator into the "real testbed" stand-in
+(stochastic interference instead of the constant factor) against which the
+Fig. 6 parity plots validate the calibrated simulator.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import jct_model
+from repro.core.job import Job, Placement
+from repro.core.leaves import Cluster
+from repro.core.modes import (DynamicMIG, OperationMode, PlaceResult,
+                              ReconfigPlan, make_mode)
+from repro.core.profiles import N_COMPUTE_SLICES, PROFILES
+from repro.core.scheduler import Scheduler, WaitQueue
+
+
+@dataclasses.dataclass
+class SimResult:
+    mode: str
+    makespan: float
+    avg_jct: float
+    avg_wait: float
+    avg_ext_frag_delay: float
+    utilization: float
+    n_reconfigs: int
+    n_drains: int
+    n_jobs: int
+    jct_by_job: Dict[str, float]
+    wait_by_job: Dict[str, float]
+
+
+@dataclasses.dataclass
+class _Running:
+    job: Job
+    placement: Placement
+    finish_version: int = 0
+
+
+class Simulation:
+    def __init__(self, jobs: List[Job], mode: OperationMode, *,
+                 n_hosts: int = 1, gpus_per_host: int = 2,
+                 scheduler: Optional[Scheduler] = None,
+                 calibrate: bool = True, ground_truth: bool = False,
+                 seed: int = 0):
+        self.jobs = {j.job_id: j for j in jobs}
+        self.mode = mode
+        self.cluster = Cluster(n_hosts=n_hosts, gpus_per_host=gpus_per_host)
+        mode.setup(self.cluster)
+        if isinstance(mode, DynamicMIG):
+            mode.register_inference(
+                [j.job_id for j in jobs if not j.train])
+        self.scheduler = scheduler or Scheduler("fifo")
+        self.calibrate = calibrate
+        self.ground_truth = ground_truth
+        self.rng = np.random.default_rng(seed)
+
+        self.queue = WaitQueue()
+        self.running: Dict[str, _Running] = {}
+        self.events: List[Tuple[float, int, str, object]] = []
+        self._seq = itertools.count()
+        self.now = 0.0
+        self.n_reconfigs = 0      # all geometry changes (C4 events)
+        self.n_drains = 0         # geometry changes suspending live jobs
+        self.reconfig_pending: Dict[str, ReconfigPlan] = {}
+        self.frag_since: Dict[str, float] = {}
+        self.ext_frag: Dict[str, float] = {}
+        # utilization integral
+        self._busy_slices = 0
+        self._last_t = 0.0
+        self._busy_integral = 0.0
+        self._first_start: Optional[float] = None
+        self._last_finish = 0.0
+
+        for j in jobs:
+            self._push(j.submit_time, "arrive", j)
+
+    # ------------------------------------------------------------ events
+    def _push(self, t: float, kind: str, payload) -> None:
+        heapq.heappush(self.events, (t, next(self._seq), kind, payload))
+
+    def _advance(self, t: float) -> None:
+        self._busy_integral += self._busy_slices * (t - self._last_t)
+        self._last_t = t
+        self.now = t
+
+    # --------------------------------------------------------------- run
+    def run(self) -> SimResult:
+        while self.events:
+            t, _, kind, payload = heapq.heappop(self.events)
+            self._advance(t)
+            if kind == "arrive":
+                self.queue.push(payload)
+            elif kind == "finish":
+                job_id, version = payload
+                rec = self.running.get(job_id)
+                if rec is None or rec.finish_version != version:
+                    continue        # stale (rescheduled by a drain)
+                self._finish(rec)
+            elif kind == "reconfig_done":
+                self._reconfig_done(payload)
+            self._schedule_pass()
+        return self._result()
+
+    # ---------------------------------------------------------- placement
+    def _schedule_pass(self) -> None:
+        placed_any = True
+        while placed_any:
+            placed_any = False
+            for job in list(self.scheduler.candidates(self.queue)):
+                res = self.mode.try_place(job, self.cluster)
+                if isinstance(res, Placement):
+                    self.queue.remove(job)
+                    self._note_frag_end(job)
+                    self._start(job, res)
+                    placed_any = True
+                    break           # re-evaluate candidates from the top
+                if isinstance(res, ReconfigPlan):
+                    self.queue.remove(job)
+                    self._note_frag_end(job)
+                    self._start_reconfig(res)
+                    placed_any = True
+                    break
+                self._note_frag(job)
+                if self.scheduler.policy == "fifo":
+                    break
+
+    def _note_frag(self, job: Job) -> None:
+        """External-fragmentation bookkeeping: enough idle capacity in
+        total, but no placement (I2)."""
+        idle_slices = sum(
+            PROFILES[i.profile].sm_slices
+            for i in self.cluster.idle_instances())
+        if self.mode.name == "DM":
+            idle_slices += sum(
+                g.free_compute_slices() for g in self.cluster.all_gpus())
+        blocked_with_capacity = idle_slices >= job.size
+        if blocked_with_capacity and job.job_id not in self.frag_since:
+            self.frag_since[job.job_id] = self.now
+        elif not blocked_with_capacity and job.job_id in self.frag_since:
+            self._note_frag_end(job)
+
+    def _note_frag_end(self, job: Job) -> None:
+        t0 = self.frag_since.pop(job.job_id, None)
+        if t0 is not None:
+            self.ext_frag[job.job_id] = (self.ext_frag.get(job.job_id, 0.0)
+                                         + (self.now - t0))
+
+    def _jct(self, job: Job, placement: Placement) -> float:
+        if placement.one_to_one:
+            inst = placement.instances[0]
+            view = jct_model.PlacementView(
+                (inst.profile,), (1,), "NONE",
+                sm_slices=PROFILES[inst.profile].sm_slices)
+        else:
+            net_jobs = sum(1 for r in self.running.values()
+                           if r.placement.transport == "NET")
+            view = jct_model.PlacementView(
+                placement.instance_types(), placement.leaves_per_gpu(),
+                placement.transport, concurrent_net_jobs=net_jobs + 1)
+        scale = jct_model.jct_scale(job.model, job.batch, job.size, view,
+                                    train=job.train)
+        base = job.base_duration * scale
+        concurrent = bool(self.running)
+        if self.ground_truth:
+            return jct_model.interference_ground_truth(
+                base, concurrent=concurrent, rng=self.rng)
+        return jct_model.calibrated(base, concurrent=concurrent,
+                                    calibrate=self.calibrate)
+
+    def _start(self, job: Job, placement: Placement) -> None:
+        job.start_time = self.now
+        if self._first_start is None:
+            self._first_start = self.now
+        dur = self._jct(job, placement)
+        rec = _Running(job, placement)
+        self.running[job.job_id] = rec
+        self._busy_slices += sum(PROFILES[i.profile].sm_slices
+                                 for i in placement.instances)
+        self._push(self.now + dur, "finish", (job.job_id, 0))
+
+    def _finish(self, rec: _Running) -> None:
+        job = rec.job
+        job.finish_time = self.now
+        self._last_finish = max(self._last_finish, self.now)
+        self._busy_slices -= sum(PROFILES[i.profile].sm_slices
+                                 for i in rec.placement.instances)
+        self.mode.release(rec.placement, self.cluster)
+        del self.running[job.job_id]
+
+    # ------------------------------------------------------ reconfig (DM)
+    def _start_reconfig(self, plan: ReconfigPlan) -> None:
+        self.n_reconfigs += 1
+        if plan.affected_jobs:
+            self.n_drains += 1
+        gpu = self.cluster.gpus[(plan.host_id, plan.gpu_id)]
+        gpu.draining = True
+        # suspend affected jobs: push their finish events out by the drain
+        for job_id in plan.affected_jobs:
+            rec = self.running.get(job_id)
+            if rec is None:
+                continue
+            remaining = self._remaining_until_finish(rec)
+            rec.finish_version += 1
+            rec.job.suspended_overhead += plan.duration
+            self._push(self.now + remaining + plan.duration, "finish",
+                       (job_id, rec.finish_version))
+        self._push(self.now + plan.duration, "reconfig_done", plan)
+
+    def _remaining_until_finish(self, rec: _Running) -> float:
+        """Time left on the currently-live finish event of ``rec``."""
+        for t, _, kind, payload in self.events:
+            if kind == "finish" and payload[0] == rec.job.job_id \
+                    and payload[1] == rec.finish_version:
+                return max(0.0, t - self.now)
+        return 0.0
+
+    def _reconfig_done(self, plan: ReconfigPlan) -> None:
+        gpu = self.cluster.gpus[(plan.host_id, plan.gpu_id)]
+        gpu.draining = False
+        assert isinstance(self.mode, DynamicMIG)
+        placement = self.mode.apply_reconfig(plan, self.cluster)
+        self._start(plan.job, placement)
+
+    # ------------------------------------------------------------ result
+    def _result(self) -> SimResult:
+        done = [j for j in self.jobs.values() if j.finish_time is not None]
+        jcts = {j.job_id: j.finish_time - j.start_time for j in done}
+        waits = {j.job_id: j.start_time - j.submit_time for j in done}
+        t0 = self._first_start or 0.0
+        makespan = self._last_finish - min(
+            (j.submit_time for j in self.jobs.values()), default=0.0)
+        total_slices = (len(self.cluster.gpus) * N_COMPUTE_SLICES)
+        util_span = max(self._last_finish - t0, 1e-9)
+        util = self._busy_integral / (total_slices * util_span)
+        frag = list(self.ext_frag.values())
+        return SimResult(
+            mode=self.mode.name,
+            makespan=makespan,
+            avg_jct=float(np.mean(list(jcts.values()))) if jcts else 0.0,
+            avg_wait=float(np.mean(list(waits.values()))) if waits else 0.0,
+            avg_ext_frag_delay=float(np.mean(frag)) if frag else 0.0,
+            utilization=util,
+            n_reconfigs=self.n_reconfigs,
+            n_drains=self.n_drains,
+            n_jobs=len(done),
+            jct_by_job=jcts,
+            wait_by_job=waits,
+        )
+
+
+def simulate(jobs: List[Job], mode_name: str, *, n_hosts: int = 1,
+             gpus_per_host: int = 2, policy: str = "fifo",
+             backfill_depth: int = 14, calibrate: bool = True,
+             ground_truth: bool = False, seed: int = 0,
+             round_robin: bool = True) -> SimResult:
+    import copy
+    jobs = copy.deepcopy(jobs)
+    kw = {"round_robin": round_robin} if mode_name == "FM" else {}
+    sim = Simulation(jobs, make_mode(mode_name, **kw),
+                     n_hosts=n_hosts, gpus_per_host=gpus_per_host,
+                     scheduler=Scheduler(policy, depth=backfill_depth),
+                     calibrate=calibrate, ground_truth=ground_truth,
+                     seed=seed)
+    return sim.run()

@@ -1,0 +1,144 @@
+"""Synthetic trace generation (§5.1).
+
+Three orthogonal dimensions, assumed independent:
+  (i)  execution-time distribution — short (600-1800 s) / medium
+       (1800-3600 s) / long (3600-7200 s) buckets with mixes derived from
+       the four public traces (Helios Earth/Venus, Philly, Alibaba);
+  (ii) workload-size distribution — small-dominant / balanced /
+       large-dominant (paper Table 2);
+  (iii) workload type — training-only / inference-only / 50:50 mixed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.jct_model import WORKLOADS
+from repro.core.job import Job
+
+DURATION_BUCKETS = {
+    "short": (600.0, 1800.0),
+    "medium": (1800.0, 3600.0),
+    "long": (3600.0, 7200.0),
+}
+
+# bucket mixes approximating the empirical duration skew of each source
+# trace (single-GPU / 0.5-1-GPU jobs).
+DURATION_SOURCES: Dict[str, Tuple[float, float, float]] = {
+    "helios_earth": (0.55, 0.25, 0.20),
+    "helios_venus": (0.45, 0.30, 0.25),
+    "philly": (0.60, 0.25, 0.15),
+    "alibaba": (0.70, 0.20, 0.10),
+}
+
+# Table 2: jobs per workload size.
+TRAIN_SIZES = (1, 2, 4, 6, 8)
+INFER_SIZES = (1, 2, 4)
+SIZE_DISTS: Dict[str, Dict[str, Tuple[int, ...]]] = {
+    "small": {"train": (16, 8, 4, 2, 1), "infer": (16, 8, 4)},
+    "balanced": {"train": (8, 8, 8, 4, 4), "infer": (10, 10, 10)},
+    "large": {"train": (4, 4, 12, 8, 4), "infer": (8, 8, 16)},
+}
+
+TYPE_MIXES = ("train", "inference", "mixed")
+
+
+def _sizes_in_range(lo_hi: Tuple[int, ...], pool: Tuple[int, ...]
+                    ) -> Tuple[int, ...]:
+    if len(lo_hi) == 1:
+        return (lo_hi[0],) if lo_hi[0] in pool or True else ()
+    lo, hi = lo_hi
+    return tuple(s for s in pool if lo <= s <= hi)
+
+
+def models_for(kind: str, size: int) -> List[str]:
+    out = []
+    for name, w in WORKLOADS.items():
+        sizes = w.train_sizes if kind == "train" else w.infer_sizes
+        batches = w.train_batches if kind == "train" else w.infer_batches
+        if not sizes or not batches:
+            continue
+        pool = TRAIN_SIZES if kind == "train" else INFER_SIZES
+        if size in _sizes_in_range(sizes, pool):
+            out.append(name)
+    return out
+
+
+def _pick_batch(model: str, kind: str, rng) -> int:
+    w = WORKLOADS[model]
+    br = w.train_batches if kind == "train" else w.infer_batches
+    if len(br) == 1:
+        return br[0]
+    lo, hi = br
+    opts = [b for b in (4, 8, 16, 32, 64, 128, 196, 256, 512)
+            if lo <= b <= hi]
+    return int(rng.choice(opts)) if opts else lo
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceCategory:
+    duration_source: str
+    size_dist: str
+    type_mix: str
+
+    @property
+    def name(self) -> str:
+        return f"{self.duration_source}/{self.size_dist}/{self.type_mix}"
+
+
+ALL_CATEGORIES: Tuple[TraceCategory, ...] = tuple(
+    TraceCategory(d, s, t)
+    for d, s, t in itertools.product(DURATION_SOURCES, SIZE_DISTS,
+                                     TYPE_MIXES))
+
+
+def generate_trace(cat: TraceCategory, *, seed: int = 0,
+                   double: bool = False, max_size: Optional[int] = None,
+                   mean_interarrival: float = 30.0) -> List[Job]:
+    """One synthetic trace for a category.
+
+    ``double=True`` doubles the Table-2 job counts (§5.1 Metrics).
+    ``max_size`` folds larger sizes down (Fig. 7 uses max 4 so SM is
+    comparable).  Arrivals are open-loop (exponential interarrivals).
+    """
+    rng = np.random.default_rng(seed)
+    mix = DURATION_SOURCES[cat.duration_source]
+    dist = SIZE_DISTS[cat.size_dist]
+
+    specs: List[Tuple[str, int]] = []      # (kind, size)
+    mult = 2 if double else 1
+
+    def add(kind: str, sizes: Tuple[int, ...], counts: Tuple[int, ...],
+            scale: float = 1.0):
+        for size, count in zip(sizes, counts):
+            n = max(1, round(count * mult * scale)) if count else 0
+            if max_size is not None and size > max_size:
+                size = max_size
+            specs.extend([(kind, size)] * n)
+
+    if cat.type_mix == "train":
+        add("train", TRAIN_SIZES, dist["train"])
+    elif cat.type_mix == "inference":
+        add("inference", INFER_SIZES, dist["infer"])
+    else:
+        add("train", TRAIN_SIZES, dist["train"], 0.5)
+        add("inference", INFER_SIZES, dist["infer"], 0.5)
+
+    rng.shuffle(specs)
+    jobs: List[Job] = []
+    t = 0.0
+    for i, (kind, size) in enumerate(specs):
+        bucket = rng.choice(("short", "medium", "long"), p=mix)
+        lo, hi = DURATION_BUCKETS[bucket]
+        duration = float(rng.uniform(lo, hi))
+        choices = models_for(kind, size)
+        model = str(rng.choice(choices)) if choices else "efficientnet-b2"
+        batch = _pick_batch(model, kind, rng)
+        t += float(rng.exponential(mean_interarrival))
+        jobs.append(Job(job_id=f"j{i:04d}", model=model, kind=kind,
+                        size=size, batch=batch, base_duration=duration,
+                        submit_time=t))
+    return jobs

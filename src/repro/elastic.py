@@ -1,0 +1,97 @@
+"""Fault tolerance & elasticity: heartbeats, stragglers, elastic re-mesh.
+
+The one-to-many model makes elasticity natural: a job's resources are a
+*set of leaves*, so losing a host shrinks the set; the job re-meshes over
+the survivors and restores from the latest checkpoint with new shardings
+(checkpoint.restore handles the re-device_put).  This is the runtime
+counterpart of the simulator's drain-free operation (I3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.leaves import TpuLeaf
+
+
+class HeartbeatMonitor:
+    """Tracks per-worker heartbeats; reports workers past the timeout."""
+
+    def __init__(self, timeout_s: float = 60.0):
+        self.timeout_s = timeout_s
+        self.last: Dict[int, float] = {}
+
+    def beat(self, worker: int, t: Optional[float] = None) -> None:
+        self.last[worker] = time.time() if t is None else t
+
+    def dead_workers(self, now: Optional[float] = None) -> List[int]:
+        now = time.time() if now is None else now
+        return [w for w, t in self.last.items()
+                if now - t > self.timeout_s]
+
+
+class StragglerDetector:
+    """Flags steps slower than median + k*MAD (straggler mitigation
+    trigger: re-shard away from the slow worker / skip its contribution)."""
+
+    def __init__(self, k: float = 5.0, window: int = 50):
+        self.k = k
+        self.window = window
+        self.durations: List[float] = []
+        self.flagged: List[int] = []
+
+    def record(self, dt: float) -> bool:
+        self.durations.append(dt)
+        tail = self.durations[-self.window:]
+        if len(tail) < 8:
+            return False
+        med = statistics.median(tail)
+        # MAD floored at 5% of the median: near-constant step times must
+        # not turn ordinary jitter into straggler alarms
+        mad = max(statistics.median([abs(x - med) for x in tail]),
+                  0.05 * med)
+        slow = dt > med + self.k * mad
+        if slow:
+            self.flagged.append(len(self.durations) - 1)
+        return slow
+
+    def summary(self) -> Dict[str, float]:
+        if not self.durations:
+            return {"steps": 0, "stragglers": 0}
+        return {"steps": len(self.durations),
+                "stragglers": len(self.flagged),
+                "median_s": statistics.median(self.durations)}
+
+
+@dataclasses.dataclass(frozen=True)
+class RemeshPlan:
+    surviving: Tuple[TpuLeaf, ...]
+    mesh_shape: Tuple[int, ...]
+    axis_names: Tuple[str, ...]
+    dropped_hosts: Tuple[Tuple[int, int], ...]
+
+
+def plan_elastic_remesh(leaves: Sequence[TpuLeaf],
+                        failed_hosts: Sequence[Tuple[int, int]],
+                        *, model_parallel: int
+                        ) -> RemeshPlan:
+    """Shrink the data axis to the largest size the survivors support.
+
+    Keeps 'model' intact (parameter shards must stay complete) and drops
+    whole data-parallel groups containing failed hosts — the standard
+    elastic-DP policy.
+    """
+    failed = set(failed_hosts)
+    surviving = [l for l in leaves if (l.pod, l.host) not in failed]
+    n = len(surviving)
+    if n < model_parallel:
+        raise RuntimeError("not enough leaves for one model shard")
+    data = n // model_parallel
+    # power-of-two friendly shrink for clean microbatching
+    while data > 1 and (n % (data * model_parallel)):
+        data -= 1
+    used = surviving[:data * model_parallel]
+    return RemeshPlan(tuple(used), (data, model_parallel),
+                      ("data", "model"), tuple(sorted(failed)))

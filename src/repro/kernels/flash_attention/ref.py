@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for flash attention (unblocked softmax attention)."""
+from __future__ import annotations
+
+from repro.models.layers import full_attention
+
+
+def attention_ref(q, k, v, *, causal: bool = True, softcap: float = 0.0):
+    """q: (B,S,H,D); k/v: (B,S,Kv,Dv) -> (B,S,H,Dv)."""
+    return full_attention(q, k, v, causal=causal, softcap=softcap)

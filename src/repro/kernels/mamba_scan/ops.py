@@ -1,0 +1,14 @@
+"""jit'd public wrapper for the SSD chunked-scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.mamba_scan.kernel import ssd_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, dt, A, B, C, *, chunk: int = 256, interpret: bool = True):
+    """Chunked SSD scan.  See kernel.py for shapes."""
+    return ssd_pallas(x, dt, A, B, C, chunk=chunk, interpret=interpret)

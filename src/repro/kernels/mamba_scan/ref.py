@@ -1,0 +1,9 @@
+"""Pure-jnp oracle: token-by-token SSD recurrence."""
+from __future__ import annotations
+
+from repro.models.ssm import ssd_sequential_ref
+
+
+def ssd_ref(x, dt, A, B, C):
+    """x: (Bt,S,H,P); dt: (Bt,S,H); A: (H,); B/C: (Bt,S,G,N)."""
+    return ssd_sequential_ref(x, dt, A, B, C)

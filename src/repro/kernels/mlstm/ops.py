@@ -1,0 +1,15 @@
+"""jit'd public wrapper for the chunked mLSTM kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.mlstm.kernel import mlstm_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mlstm(q, k, v, i_raw, f_raw, *, chunk: int = 256,
+          interpret: bool = True):
+    return mlstm_pallas(q, k, v, i_raw, f_raw, chunk=chunk,
+                        interpret=interpret)

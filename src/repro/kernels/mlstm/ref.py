@@ -1,0 +1,9 @@
+"""Pure-jnp oracle: token-by-token stabilized mLSTM recurrence."""
+from __future__ import annotations
+
+from repro.models.xlstm import mlstm_sequential_ref
+
+
+def mlstm_ref(q, k, v, i_raw, f_raw):
+    """q,k,v: (B,S,H,D); gates: (B,S,H) -> (h, (C, n, m))."""
+    return mlstm_sequential_ref(q, k, v, i_raw, f_raw)

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for RMSNorm."""
+from __future__ import annotations
+
+from repro.models.layers import rmsnorm as rmsnorm_jnp
+
+
+def rmsnorm_ref(x, w, *, eps: float = 1e-5):
+    return rmsnorm_jnp(x, w, eps)

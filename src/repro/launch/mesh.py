@@ -1,0 +1,43 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state — the dry-run sets
+``XLA_FLAGS`` before first jax init and everything else must see the real
+device count.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from repro.core.aggregation import leaves_to_mesh
+from repro.core.leaves import TpuLeaf, TpuSliceTopology
+from repro.sharding import MeshRules, make_rules
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def production_rules(mesh: Mesh, *, long_ctx: bool = False,
+                     seq_shard: bool = False) -> MeshRules:
+    return make_rules(mesh, long_ctx=long_ctx, seq_shard=seq_shard)
+
+
+def make_leaf_mesh(n_leaves: int, *, model_parallel: int,
+                   topology: Optional[TpuSliceTopology] = None,
+                   order: str = "grouped") -> Mesh:
+    """Flex-MIG style job mesh: ``n_leaves`` chips aggregated one-to-many.
+
+    The leaf pool comes from the TPU-slice topology; device order follows
+    the topology-aware placement policy (core/aggregation.py).
+    """
+    topo = topology or TpuSliceTopology()
+    leaves = topo.leaves()[:n_leaves]
+    assert n_leaves % model_parallel == 0
+    shape = (n_leaves // model_parallel, model_parallel)
+    return leaves_to_mesh(leaves, shape, ("data", "model"), order=order)

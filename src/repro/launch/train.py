@@ -1,0 +1,64 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> ...``
+
+On the CPU container this trains reduced configs on a single device; on a
+real TPU runtime the same entrypoint builds the production mesh and runs
+the sharded step (the dry-run proves those lower+compile).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro import optim
+from repro.data import DataConfig
+from repro.models.registry import ARCH_IDS, build_model, get_config, \
+    reduced_config
+from repro.sharding import make_rules
+from repro.train import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b", choices=ARCH_IDS)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--full-config", action="store_true")
+    ap.add_argument("--data-parallel", type=int, default=0,
+                    help="devices for a (dp, mp) mesh; 0 = single device")
+    ap.add_argument("--model-parallel", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full_config:
+        cfg = reduced_config(cfg)
+    model = build_model(cfg, remat=args.full_config)
+
+    rules = None
+    if args.data_parallel:
+        mesh = jax.make_mesh((args.data_parallel, args.model_parallel),
+                             ("data", "model"))
+        rules = make_rules(mesh)
+
+    trainer = Trainer(
+        model,
+        optim.AdamWConfig(peak_lr=args.lr, warmup_steps=20,
+                          total_steps=args.steps),
+        TrainerConfig(n_steps=args.steps, ckpt_every=50,
+                      ckpt_dir=args.ckpt_dir, log_every=10,
+                      accum=args.accum),
+        DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                   global_batch=args.batch),
+        rules=rules)
+    out = trainer.run(resume=True)
+    for h in out["history"]:
+        print(f"step {h['step']:4d}  loss {h['loss']:.4f}  "
+              f"{h['sec_per_step']*1e3:.0f} ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,171 @@
+"""FFN variants: dense MLP and expert-parallel token-choice MoE.
+
+The MoE layer is the framework's EP showcase: experts are sharded over the
+'model' mesh axis via shard_map; tokens stay on their data shard (replicated
+over 'model'), each model shard runs its local experts on a capacity-bounded
+buffer built by scatter (no (T,E,C) one-hot dispatch tensor — that would be
+~100x the token bytes at 32k prefill), and expert outputs are combined with a
+single psum over 'model'.  Differentiable end-to-end (scatter-add / gather /
+psum all have transposes), so it trains under grad-accumulation + remat.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MoEConfig
+from repro.models import layers as L
+from repro.sharding import batch_axes, current_rules, shard
+
+
+def moe_init(key, cfg: ArchConfig, dtype=L.DEFAULT_DTYPE):
+    m = cfg.moe
+    d = cfg.d_model
+    E = m.n_experts_padded
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": L.dense_init(ks[0], d, E, dtype=jnp.float32,
+                               scale=0.02),
+        "w_gate": _expert_init(ks[1], E, d, m.d_ff, dtype),
+        "w_up": _expert_init(ks[2], E, d, m.d_ff, dtype),
+        "w_down": _expert_init(ks[3], E, m.d_ff, d, dtype),
+    }
+    if m.n_routed < E:
+        # padded experts: router column bias -inf'ish via 0-init rows is not
+        # enough; we mask their logits in apply using n_routed.
+        pass
+    if m.n_shared > 0:
+        p["shared"] = L.mlp_init(ks[4], d, m.n_shared * m.d_ff, "silu", dtype)
+    return p
+
+
+def _expert_init(key, e, d_in, d_out, dtype):
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (e, d_in, d_out),
+                                        jnp.float32) * scale).astype(dtype)
+
+
+def moe_logical_axes(cfg: ArchConfig):
+    m = cfg.moe
+    p = {
+        "router": (None, None),
+        "w_gate": ("expert", "embed", None),
+        "w_up": ("expert", "embed", None),
+        "w_down": ("expert", None, "embed"),
+    }
+    if m.n_shared > 0:
+        p["shared"] = L.mlp_logical_axes("silu")
+    return p
+
+
+def _capacity(n_tokens: int, m: MoEConfig) -> int:
+    c = int(math.ceil(n_tokens * m.top_k / m.n_experts_padded
+                      * m.capacity_factor))
+    return max(8, -(-c // 8) * 8)   # round up to 8
+
+
+def _moe_local(x, router_w, w_gate, w_up, w_down, *, m: MoEConfig,
+               shard_idx, model_axis: Optional[str]):
+    """Per-shard MoE.  x: (B_local, S, D); expert weights: local slice."""
+    B, S, D = x.shape
+    T = B * S
+    E = m.n_experts_padded
+    E_loc = w_gate.shape[0]
+    k = m.top_k
+    C = _capacity(T, m)
+
+    x2 = x.reshape(T, D)
+    logits = jnp.einsum("td,de->te", x2.astype(jnp.float32),
+                        router_w.astype(jnp.float32))
+    if m.n_routed < E:            # mask padded experts out of routing
+        pad_mask = jnp.arange(E) < m.n_routed
+        logits = jnp.where(pad_mask[None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)               # (T,k)
+
+    # --- capacity assignment (global over E, shared across model shards) ---
+    flat_e = top_e.reshape(-1)                            # (T*k,)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)   # (T*k, E)
+    pos_in_e = jnp.cumsum(onehot, axis=0) * onehot
+    slot = jnp.sum(pos_in_e, axis=1) - 1                  # (T*k,)
+    slot = slot.reshape(T, k)
+    keep = slot < C
+
+    e0 = shard_idx * E_loc
+    local = (top_e >= e0) & (top_e < e0 + E_loc) & keep   # (T,k)
+    b_idx = jnp.where(local, top_e - e0, 0)
+    s_idx = jnp.where(local, slot, C)                     # C row = dropped
+
+    buf = jnp.zeros((E_loc, C + 1, D), x.dtype)
+    for j in range(k):            # k small (<=6): k scatters, no token repeat
+        buf = buf.at[b_idx[:, j], s_idx[:, j]].add(
+            x2 * local[:, j, None].astype(x.dtype))
+
+    h = jnp.einsum("ecd,edf->ecf", buf, w_gate)
+    u = jnp.einsum("ecd,edf->ecf", buf, w_up)
+    y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u, w_down)
+
+    out = jnp.zeros((T, D), jnp.float32)
+    for j in range(k):
+        contrib = y[b_idx[:, j], s_idx[:, j]].astype(jnp.float32)
+        gate = (top_p[:, j] * local[:, j]).astype(jnp.float32)
+        out = out + contrib * gate[:, None]
+    if model_axis is not None:
+        out = jax.lax.psum(out, model_axis)
+
+    # --- aux losses (identical on every model shard; local-token means) ----
+    dispatch_frac = jnp.mean(
+        jax.nn.one_hot(top_e, E, dtype=jnp.float32), axis=(0, 1)) * E
+    mean_prob = jnp.mean(probs, axis=0) * E
+    aux = jnp.mean(dispatch_frac * mean_prob) * m.aux_coef
+    zl = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    aux = aux + m.router_z_coef * zl
+    return out.reshape(B, S, D).astype(x.dtype), aux
+
+
+def moe_apply(x, p, cfg: ArchConfig) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out, aux_loss).  Shared experts added densely."""
+    m = cfg.moe
+    rules = current_rules()
+    model_ax = None
+    if rules is not None:
+        ma = rules.rules.get("expert")
+        if ma is not None:
+            model_ax = ma if isinstance(ma, str) else ma[0]
+
+    if model_ax is None:          # single-shard path (tests, CPU)
+        out, aux = _moe_local(x, p["router"], p["w_gate"], p["w_up"],
+                              p["w_down"], m=m, shard_idx=0, model_axis=None)
+    else:
+        mesh = rules.mesh
+        from jax.sharding import PartitionSpec as P
+        bspec = rules.rules.get("batch")
+        n_model = mesh.shape[model_ax]
+        assert m.n_experts_padded % n_model == 0, (
+            f"experts {m.n_experts_padded} must divide model axis {n_model}")
+
+        def mapped(xl, rw, wg, wu, wd):
+            idx = jax.lax.axis_index(model_ax)
+            out, aux = _moe_local(xl, rw, wg, wu, wd, m=m, shard_idx=idx,
+                                  model_axis=model_ax)
+            # aux identical across model shards; average over batch shards
+            for ax in batch_axes(rules):
+                aux = jax.lax.pmean(aux, ax)
+            return out, aux
+
+        out, aux = jax.shard_map(
+            mapped, mesh=mesh,
+            in_specs=(P(bspec, None, None), P(None, None),
+                      P(model_ax, None, None), P(model_ax, None, None),
+                      P(model_ax, None, None)),
+            out_specs=(P(bspec, None, None), P()),
+            check_vma=False,
+        )(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+
+    if m.n_shared > 0:
+        out = out + L.mlp_apply(x, p["shared"], "silu")
+    return out, aux

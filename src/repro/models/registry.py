@@ -1,0 +1,122 @@
+"""Model + config registry: ``--arch <id>`` resolution."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+_CONFIG_MODULES = {
+    "whisper-tiny": "repro.configs.whisper_tiny",
+    "llama-3.2-vision-90b": "repro.configs.llama32_vision_90b",
+    "command-r-plus-104b": "repro.configs.command_r_plus_104b",
+    "glm4-9b": "repro.configs.glm4_9b",
+    "stablelm-1.6b": "repro.configs.stablelm_1_6b",
+    "llama3.2-1b": "repro.configs.llama32_1b",
+    "qwen2-moe-a2.7b": "repro.configs.qwen2_moe_a27b",
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite_16b",
+    "zamba2-1.2b": "repro.configs.zamba2_1_2b",
+    "xlstm-125m": "repro.configs.xlstm_125m",
+}
+
+ARCH_IDS = tuple(_CONFIG_MODULES)
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    import importlib
+    if arch_id not in _CONFIG_MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    return importlib.import_module(_CONFIG_MODULES[arch_id]).CONFIG
+
+
+def build_model(cfg: ArchConfig, *, remat: bool = True):
+    from repro.models.transformer import TransformerLM
+    from repro.models.xlstm import XLSTMLM
+    from repro.models.zamba import ZambaLM
+    if cfg.family == "hybrid":
+        return ZambaLM(cfg, remat=remat)
+    if cfg.family == "ssm":
+        return XLSTMLM(cfg, remat=remat)
+    return TransformerLM(cfg, remat=remat)
+
+
+def get_model(arch_id: str, *, remat: bool = True):
+    cfg = get_config(arch_id)
+    return cfg, build_model(cfg, remat=remat)
+
+
+# ---------------------------------------------------------------------------
+# parameter counting via eval_shape (no duplication of init math)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _param_tree_sizes(arch_id: str) -> Dict[str, int]:
+    import math
+    cfg = get_config(arch_id)
+    model = build_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.key(0))
+    # math.prod, NOT jnp.prod: stacked leaves exceed int32
+    total = sum(math.prod(l.shape) for l in jax.tree.leaves(shapes))
+    return {"total": total}
+
+
+def param_count(cfg: ArchConfig) -> int:
+    return _param_tree_sizes(cfg.arch_id)["total"]
+
+
+def active_param_count(cfg: ArchConfig) -> int:
+    """Active params per token (MoE: only top-k + shared experts count)."""
+    total = param_count(cfg)
+    if cfg.moe is None:
+        return total
+    m = cfg.moe
+    # routed expert params not selected are inactive
+    per_expert = 3 * cfg.d_model * m.d_ff
+    n_moe_layers = cfg.n_layers - m.first_dense_layers
+    inactive = n_moe_layers * (m.n_experts_padded - m.top_k) * per_expert
+    return total - inactive
+
+
+def reduced_config(cfg: ArchConfig) -> ArchConfig:
+    """A tiny same-family config for CPU smoke tests."""
+    kw: Dict[str, Any] = dict(
+        n_layers=min(cfg.n_layers, 4 if cfg.family not in
+                     ("hybrid", "ssm") else 8),
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 4) if cfg.n_kv_heads < cfg.n_heads
+        else 4,
+        d_ff=256 if cfg.d_ff else 0,
+        vocab_size=512,
+        head_dim=0,
+    )
+    if cfg.mla is not None:
+        kw["mla"] = dataclasses.replace(cfg.mla, kv_lora_rank=64,
+                                        qk_nope_dim=32, qk_rope_dim=16,
+                                        v_head_dim=32)
+        kw["head_dim"] = 32
+    if cfg.moe is not None:
+        kw["moe"] = dataclasses.replace(
+            cfg.moe, n_routed=8, n_padded=8, top_k=2, d_ff=64,
+            n_shared=min(cfg.moe.n_shared, 2),
+            dense_d_ff=128 if cfg.moe.first_dense_layers else 0)
+    if cfg.ssm is not None:
+        kw["ssm"] = dataclasses.replace(cfg.ssm, d_state=16, head_dim=32,
+                                        chunk=32)
+    if cfg.hybrid_attn_every:
+        kw["hybrid_attn_every"] = 3
+    if cfg.slstm_every:
+        kw["slstm_every"] = 4
+        kw["n_layers"] = 8
+    if cfg.is_encdec:
+        kw["n_enc_layers"] = 2
+        kw["enc_seq_len"] = 16
+    if cfg.cross_every:
+        kw["cross_every"] = 2
+        kw["n_layers"] = 4
+        kw["n_media_tokens"] = 8
+    return dataclasses.replace(cfg, **kw)

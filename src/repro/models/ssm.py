@@ -1,0 +1,292 @@
+"""Mamba2 (SSD) blocks — chunked scan in pure jnp (the Pallas kernel in
+``repro.kernels.mamba_scan`` implements the same chunked algorithm; this
+module is the XLA fallback and the numerical reference).
+
+Math follows "Transformers are SSMs" (Mamba-2), ssd_minimal_discrete:
+    h_{t} = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t
+    y_t   = C_t . h_t + D x_t
+computed chunk-parallel: within-chunk quadratic form + cross-chunk carried
+state.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, SSMConfig
+from repro.models import layers as L
+from repro.sharding import shard
+
+
+# ---------------------------------------------------------------------------
+# SSD core (chunked)
+# ---------------------------------------------------------------------------
+
+def _segsum(a):
+    """a: (..., Q) log-decays -> (..., Q, Q) lower-tri segment sums.
+
+    out[t, s] = sum_{r=s+1..t} a_r  (decay applied moving from s to t).
+    """
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]       # b_t - b_s
+    mask = jnp.tril(jnp.ones((Q, Q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, *, chunk: int,
+                init_state: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunk-parallel SSD.
+
+    x:  (Bt, S, H, P)   inputs per head
+    dt: (Bt, S, H)      positive step sizes
+    A:  (H,)            negative decay rates
+    B:  (Bt, S, G, N)   input projections (G groups, H % G == 0)
+    C:  (Bt, S, G, N)   output projections
+    Returns (y (Bt,S,H,P), final_state (Bt,H,P,N)).
+    """
+    Bt, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    xf = (x * dt[..., None]).astype(jnp.float32)     # discretized input
+    la = dt.astype(jnp.float32) * A.astype(jnp.float32)  # (Bt,S,H) log decay
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+
+    # reshape to chunks
+    xc = xf.reshape(Bt, nc, chunk, H, P)
+    lac = la.reshape(Bt, nc, chunk, H)
+    Bc = Bf.reshape(Bt, nc, chunk, G, N)
+    Cc = Cf.reshape(Bt, nc, chunk, G, N)
+
+    # ---- within-chunk (diagonal blocks) ----
+    Lmat = jnp.exp(_segsum(jnp.moveaxis(lac, 3, 2)))     # (Bt,nc,H,Q,Q)
+    # scores[t,s] = C_t . B_s, grouped
+    Bg = Bc.reshape(Bt, nc, chunk, G, 1, N)
+    Cg = Cc.reshape(Bt, nc, chunk, G, 1, N)
+    CB = jnp.einsum("bnqgjN,bnsgjN->bngjqs",
+                    jnp.broadcast_to(Cg, (Bt, nc, chunk, G, rep, N)),
+                    jnp.broadcast_to(Bg, (Bt, nc, chunk, G, rep, N))
+                    ).reshape(Bt, nc, G * rep, chunk, chunk)
+    # order heads as g*rep+j to match h = g*rep + j layout
+    W = CB * Lmat                                        # (Bt,nc,H,Q,Q)
+    y_diag = jnp.einsum("bnhts,bnshp->bnthp", W, xc)
+
+    # ---- chunk states ----
+    b_end = jnp.cumsum(lac, axis=2)                      # (Bt,nc,Q,H)
+    total = b_end[:, :, -1, :]                           # (Bt,nc,H)
+    decay_states = jnp.exp(total[:, :, None, :] - b_end)  # (Bt,nc,Q,H)
+    # state_c = sum_s decay * B_s x_s^T  -> (Bt,nc,H,P,N)
+    Bh = jnp.repeat(Bc, rep, axis=3)                     # (Bt,nc,Q,H,N)
+    states = jnp.einsum("bcqh,bcqhN,bcqhp->bchpN",
+                        decay_states, Bh, xc)
+
+    # ---- cross-chunk recurrence ----
+    if init_state is None:
+        s0 = jnp.zeros((Bt, H, P, N), jnp.float32)
+    else:
+        s0 = init_state.astype(jnp.float32)
+
+    @jax.checkpoint
+    def step(s_prev, inp):
+        st, dec = inp                                    # dec: (Bt,H)
+        s_new = s_prev * jnp.exp(dec)[:, :, None, None] + st
+        return s_new, s_prev
+
+    tot_t = jnp.moveaxis(total, 1, 0)                    # (nc,Bt,H)
+    st_t = jnp.moveaxis(states, 1, 0)                    # (nc,Bt,H,P,N)
+    final, prev_states = jax.lax.scan(step, s0, (st_t, tot_t))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)        # (Bt,nc,H,P,N)
+
+    # ---- inter-chunk output ----
+    Ch = jnp.repeat(Cc, rep, axis=3)                     # (Bt,nc,Q,H,N)
+    state_decay = jnp.exp(b_end)                         # (Bt,nc,Q,H)
+    y_off = jnp.einsum("bcqhN,bchpN,bcqh->bcqhp",
+                       Ch, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(Bt, S, H, P)
+    return y.astype(x.dtype), final
+
+
+def ssd_step(state, x_t, dt_t, A, B_t, C_t):
+    """Single-token recurrence.  state: (Bt,H,P,N); x_t: (Bt,H,P);
+    dt_t: (Bt,H); B_t/C_t: (Bt,G,N)."""
+    H = x_t.shape[1]
+    G = B_t.shape[1]
+    rep = H // G
+    dA = jnp.exp(dt_t.astype(jnp.float32) * A.astype(jnp.float32))
+    Bh = jnp.repeat(B_t, rep, axis=1).astype(jnp.float32)  # (Bt,H,N)
+    Ch = jnp.repeat(C_t, rep, axis=1).astype(jnp.float32)
+    xd = (x_t * dt_t[..., None]).astype(jnp.float32)
+    state = state * dA[..., None, None] + jnp.einsum(
+        "bhp,bhn->bhpn", xd, Bh)
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch)
+    return y.astype(x_t.dtype), state
+
+
+def ssd_sequential_ref(x, dt, A, B, C, *, init_state=None):
+    """Token-by-token oracle (tests only)."""
+    Bt, S, H, P = x.shape
+    N = B.shape[-1]
+    state = (jnp.zeros((Bt, H, P, N), jnp.float32)
+             if init_state is None else init_state.astype(jnp.float32))
+
+    def step(state, inp):
+        x_t, dt_t, B_t, C_t = inp
+        y, state = ssd_step(state, x_t, dt_t, A, B_t, C_t)
+        return state, y
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(B, 1, 0), jnp.moveaxis(C, 1, 0))
+    state, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+def mamba_init(key, cfg: ArchConfig, dtype=L.DEFAULT_DTYPE):
+    s = cfg.ssm
+    D = cfg.d_model
+    Di = s.d_inner(D)
+    H = s.n_heads(D)
+    G, N, K = 1, s.d_state, s.d_conv
+    ks = jax.random.split(key, 8)
+    dt_init = jnp.log(jnp.exp(
+        jnp.linspace(1e-3, 1e-1, H).astype(jnp.float32)) - 1.0)
+    return {
+        "wz": L.dense_init(ks[0], D, Di, dtype=dtype),
+        "wx": L.dense_init(ks[1], D, Di, dtype=dtype),
+        "wB": L.dense_init(ks[2], D, G * N, dtype=dtype),
+        "wC": L.dense_init(ks[3], D, G * N, dtype=dtype),
+        "wdt": L.dense_init(ks[4], D, H, dtype=dtype),
+        "conv_x": (jax.random.normal(ks[5], (Di, K), jnp.float32)
+                   / math.sqrt(K)).astype(dtype),
+        "conv_B": (jax.random.normal(ks[6], (G * N, K), jnp.float32)
+                   / math.sqrt(K)).astype(dtype),
+        "conv_C": (jax.random.normal(ks[7], (G * N, K), jnp.float32)
+                   / math.sqrt(K)).astype(dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),    # A = -exp(0) = -1
+        "Dskip": jnp.ones((H,), jnp.float32),
+        "dt_bias": dt_init,
+        "norm": {"w": jnp.ones((Di,), jnp.float32)},
+        "out": L.dense_init(ks[4], Di, D, dtype=dtype),
+    }
+
+
+def mamba_logical_axes(cfg: ArchConfig):
+    return {
+        "wz": ("embed", "heads"), "wx": ("embed", "heads"),
+        "wB": ("embed", None), "wC": ("embed", None),
+        "wdt": ("embed", None),
+        "conv_x": ("heads", None), "conv_B": (None, None),
+        "conv_C": (None, None),
+        "A_log": (None,), "Dskip": (None,), "dt_bias": (None,),
+        "norm": {"w": ("heads",)},
+        "out": ("heads", "embed"),
+    }
+
+
+def _mamba_proj(x, p, cfg: ArchConfig):
+    s = cfg.ssm
+    z = jnp.einsum("bsd,de->bse", x, p["wz"])
+    xi = jnp.einsum("bsd,de->bse", x, p["wx"])
+    Bp = jnp.einsum("bsd,dn->bsn", x, p["wB"])
+    Cp = jnp.einsum("bsd,dn->bsn", x, p["wC"])
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, p["wdt"])
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    return z, xi, Bp, Cp, dt
+
+
+def mamba_apply(x, p, cfg: ArchConfig, *, use_kernel: bool = False):
+    """Full-sequence (train / prefill) Mamba2 block.  x: (B,S,D)."""
+    s = cfg.ssm
+    B_, S, D = x.shape
+    Di = s.d_inner(D)
+    H = s.n_heads(D)
+    G, N = 1, s.d_state
+    z, xi, Bp, Cp, dt = _mamba_proj(x, p, cfg)
+    xi = jax.nn.silu(L.causal_conv1d(xi, p["conv_x"]))
+    Bp = jax.nn.silu(L.causal_conv1d(Bp, p["conv_B"]))
+    Cp = jax.nn.silu(L.causal_conv1d(Cp, p["conv_C"]))
+    xh = xi.reshape(B_, S, H, s.head_dim)
+    xh = shard(xh, "batch", None, "heads", None)
+    A = -jnp.exp(p["A_log"])
+    Bg = Bp.reshape(B_, S, G, N)
+    Cg = Cp.reshape(B_, S, G, N)
+    if use_kernel:
+        from repro.kernels.mamba_scan import ops as mops
+        y, _ = mops.ssd(xh, dt, A, Bg, Cg, chunk=s.chunk)
+    else:
+        y, _ = ssd_chunked(xh, dt, A, Bg, Cg,
+                           chunk=min(s.chunk, S))
+    y = y + xh * p["Dskip"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(B_, S, Di)
+    y = L.rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                  p["norm"]["w"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, p["out"])
+
+
+def mamba_make_cache(cfg: ArchConfig, n_blocks: int, batch: int,
+                     dtype=L.DEFAULT_DTYPE):
+    s = cfg.ssm
+    D = cfg.d_model
+    Di, H = s.d_inner(D), s.n_heads(D)
+    G, N, K = 1, s.d_state, s.d_conv
+    return {
+        "conv_x": jnp.zeros((n_blocks, batch, K - 1, Di), dtype),
+        "conv_B": jnp.zeros((n_blocks, batch, K - 1, G * N), dtype),
+        "conv_C": jnp.zeros((n_blocks, batch, K - 1, G * N), dtype),
+        "state": jnp.zeros((n_blocks, batch, H, s.head_dim, N), jnp.float32),
+    }
+
+
+def mamba_cache_axes():
+    return {"conv_x": (None, "kv_batch", None, "heads"),
+            "conv_B": (None, "kv_batch", None, None),
+            "conv_C": (None, "kv_batch", None, None),
+            "state": (None, "kv_batch", "heads", None, None)}
+
+
+def mamba_decode(x, p, cfg: ArchConfig, cache_blk):
+    """Single-token step.  x: (B,1,D); cache_blk: one block's cache slice."""
+    s = cfg.ssm
+    B_, _, D = x.shape
+    H = s.n_heads(D)
+    G, N, K = 1, s.d_state, s.d_conv
+    z, xi, Bp, Cp, dt = _mamba_proj(x, p, cfg)
+
+    def conv_step(seg, w, state):
+        full = jnp.concatenate([state.astype(seg.dtype), seg], axis=1)
+        out = jnp.einsum("bkc,ck->bc", full, w.astype(seg.dtype))[:, None]
+        return jax.nn.silu(out), full[:, 1:]
+
+    xi, cx = conv_step(xi, p["conv_x"], cache_blk["conv_x"])
+    Bp, cb = conv_step(Bp, p["conv_B"], cache_blk["conv_B"])
+    Cp, cc = conv_step(Cp, p["conv_C"], cache_blk["conv_C"])
+    A = -jnp.exp(p["A_log"])
+    y, state = ssd_step(cache_blk["state"],
+                        xi[:, 0].reshape(B_, H, s.head_dim),
+                        dt[:, 0], A,
+                        Bp[:, 0].reshape(B_, G, N),
+                        Cp[:, 0].reshape(B_, G, N))
+    y = y + xi[:, 0].reshape(B_, H, s.head_dim) * \
+        p["Dskip"].astype(y.dtype)[None, :, None]
+    y = y.reshape(B_, 1, -1)
+    y = L.rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                  p["norm"]["w"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out"])
+    new_cache = {"conv_x": cx.astype(cache_blk["conv_x"].dtype),
+                 "conv_B": cb.astype(cache_blk["conv_B"].dtype),
+                 "conv_C": cc.astype(cache_blk["conv_C"].dtype),
+                 "state": state}
+    return out, new_cache

@@ -1,0 +1,183 @@
+"""Zamba2-style hybrid LM: Mamba2 backbone + one *shared* attention block
+applied every N mamba blocks (weights shared across applications, per the
+Zamba2 paper).  Sub-quadratic: eligible for long_500k.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.transformer import _norm_axes, _stacked, layer_init, \
+    layer_logical_axes, layer_apply
+from repro.sharding import shard
+
+
+class ZambaLM:
+    def __init__(self, cfg: ArchConfig, *, remat: bool = True):
+        self.cfg = cfg
+        self.remat = remat
+        self.n_super = cfg.n_layers // cfg.hybrid_attn_every
+        self.n_tail = cfg.n_layers - self.n_super * cfg.hybrid_attn_every
+
+    # ---------------------------------------------------------------- init
+    def init(self, rng):
+        cfg = self.cfg
+        km, kt, ka, ke = jax.random.split(rng, 4)
+
+        def stack(key, n):
+            return jax.vmap(lambda k: {
+                "norm": L.norm_init(cfg.d_model, cfg.norm),
+                "mamba": S.mamba_init(k, cfg),
+            })(jax.random.split(key, n))
+
+        p: Dict[str, Any] = {
+            "embed": L.embed_init(ke, cfg.vocab_size, cfg.d_model),
+            "final_norm": L.norm_init(cfg.d_model, cfg.norm),
+            "blocks": jax.vmap(lambda k: stack(k, cfg.hybrid_attn_every))(
+                jax.random.split(km, self.n_super)),
+            "shared_attn": layer_init(ka, cfg, moe=False),
+        }
+        if self.n_tail:
+            p["tail"] = stack(kt, self.n_tail)
+        return p
+
+    def param_logical_axes(self):
+        cfg = self.cfg
+        blk = {"norm": _norm_axes(cfg), "mamba": S.mamba_logical_axes(cfg)}
+        p = {
+            "embed": ("vocab", "embed"),
+            "final_norm": _norm_axes(cfg),
+            "blocks": jax.tree.map(lambda ax: (None, None) + ax, blk,
+                                   is_leaf=lambda v: isinstance(v, tuple)),
+            "shared_attn": layer_logical_axes(cfg, moe=False),
+        }
+        if self.n_tail:
+            p["tail"] = _stacked(blk)
+        return p
+
+    # ------------------------------------------------------------ forward
+    def _mamba_block(self, x, bp):
+        cfg = self.cfg
+        h = L.norm_apply(x, bp["norm"], cfg.norm, cfg.norm_eps)
+        return x + S.mamba_apply(h, bp["mamba"], cfg)
+
+    def forward_logits(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = params["embed"][tokens]
+        x = shard(x, "batch", None, None)
+        positions = jnp.arange(tokens.shape[1])
+
+        def super_body(x, sp):
+            def inner(x, bp):
+                return self._mamba_block(x, bp), None
+            x, _ = jax.lax.scan(inner, x, sp)
+            x, _ = layer_apply(x, params["shared_attn"], cfg,
+                               positions=positions, moe=False)
+            return x, None
+
+        f = jax.checkpoint(super_body) if self.remat else super_body
+        x, _ = jax.lax.scan(f, x, params["blocks"])
+        if self.n_tail:
+            def inner(x, bp):
+                return self._mamba_block(x, bp), None
+            g = jax.checkpoint(inner) if self.remat else inner
+            x, _ = jax.lax.scan(g, x, params["tail"])
+        x = L.norm_apply(x, params["final_norm"], cfg.norm, cfg.norm_eps)
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+        return shard(logits, "batch", None, "vocab"), jnp.zeros(
+            (), jnp.float32)
+
+    def loss(self, params, batch):
+        logits, aux = self.forward_logits(params, batch)
+        nll, zl = L.softmax_xent(logits, batch["targets"])
+        return nll + zl, {"nll": nll, "z_loss": zl, "aux": aux}
+
+    # ------------------------------------------------------------- decode
+    def init_cache(self, batch_size: int, seq_len: int):
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        cache = {
+            "mamba": S.mamba_make_cache(cfg, self.n_super *
+                                        cfg.hybrid_attn_every, batch_size),
+            "attn_k": jnp.zeros((self.n_super, batch_size, seq_len,
+                                 cfg.n_kv_heads, hd), L.DEFAULT_DTYPE),
+            "attn_v": jnp.zeros((self.n_super, batch_size, seq_len,
+                                 cfg.n_kv_heads, hd), L.DEFAULT_DTYPE),
+        }
+        cache["mamba"] = jax.tree.map(
+            lambda a: a.reshape((self.n_super, cfg.hybrid_attn_every)
+                                + a.shape[1:]), cache["mamba"])
+        if self.n_tail:
+            cache["tail"] = S.mamba_make_cache(cfg, self.n_tail, batch_size)
+        return cache
+
+    def cache_logical_axes(self):
+        m = jax.tree.map(lambda ax: (None,) + ax, S.mamba_cache_axes(),
+                         is_leaf=lambda v: isinstance(v, tuple))
+        axes = {
+            "mamba": m,
+            "attn_k": (None, "kv_batch", "kv_seq", None, None),
+            "attn_v": (None, "kv_batch", "kv_seq", None, None),
+        }
+        if self.n_tail:
+            axes["tail"] = S.mamba_cache_axes()
+        return axes
+
+    def decode_step(self, params, cache, tokens, pos):
+        cfg = self.cfg
+        x = params["embed"][tokens]
+        x = shard(x, "batch", None, None)
+
+        def super_body(x, inp):
+            sp, mcache, kc, vc = inp
+
+            def inner(x, bp_c):
+                bp, c = bp_c
+                h = L.norm_apply(x, bp["norm"], cfg.norm, cfg.norm_eps)
+                o, c = S.mamba_decode(h, bp["mamba"], cfg, c)
+                return x + o, c
+
+            x, mcache = jax.lax.scan(inner, x, (sp, mcache))
+            # shared attention application
+            ap = params["shared_attn"]
+            h = L.norm_apply(x, ap["attn_norm"], cfg.norm, cfg.norm_eps)
+            a, kc, vc = A.gqa_decode(h, ap["attn"], cfg, kc, vc, pos)
+            x = x + a
+            h2 = L.norm_apply(x, ap["ffn_norm"], cfg.norm, cfg.norm_eps)
+            x = x + L.mlp_apply(h2, ap["ffn"], cfg.act)
+            return x, (mcache, kc, vc)
+
+        x, (mc, ks, vs) = jax.lax.scan(
+            super_body, x,
+            (params["blocks"], cache["mamba"],
+             cache["attn_k"], cache["attn_v"]))
+        new_cache = {"mamba": mc, "attn_k": ks, "attn_v": vs}
+        if self.n_tail:
+            def inner(x, bp_c):
+                bp, c = bp_c
+                h = L.norm_apply(x, bp["norm"], cfg.norm, cfg.norm_eps)
+                o, c = S.mamba_decode(h, bp["mamba"], cfg, c)
+                return x + o, c
+            x, tc = jax.lax.scan(inner, x, (params["tail"], cache["tail"]))
+            new_cache["tail"] = tc
+        x = L.norm_apply(x, params["final_norm"], cfg.norm, cfg.norm_eps)
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+        return shard(logits, "batch", None, "vocab"), new_cache
+
+    def input_specs(self, shape: ShapeConfig):
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        if shape.kind == "train":
+            return {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                    "targets": jax.ShapeDtypeStruct((B, S), i32)}
+        if shape.kind == "prefill":
+            return {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), i32),
+                "pos": jax.ShapeDtypeStruct((), i32)}

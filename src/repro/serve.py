@@ -1,0 +1,123 @@
+"""Serving substrate: batched decode with KV caches + request batcher.
+
+``make_serve_step`` produces the jit-able one-token decode used by the
+decode_32k / long_500k dry-run cells; ``BatchedServer`` is a CPU-runnable
+batching loop (continuous batching over a fixed slot count).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding import MeshRules, use_rules
+
+
+def make_serve_step(model, *, rules: Optional[MeshRules] = None):
+    """Returns step(params, cache, tokens (B,1), pos ()) ->
+    (logits, cache)."""
+
+    def step(params, cache, tokens, pos):
+        with use_rules(rules):
+            return model.decode_step(params, cache, tokens, pos)
+
+    return jax.jit(step, donate_argnums=(1,))
+
+
+def make_prefill_step(model, *, rules: Optional[MeshRules] = None):
+    """Full-sequence forward (the prefill dry-run cell)."""
+
+    def step(params, batch):
+        with use_rules(rules):
+            logits, _aux = model.forward_logits(params, batch)
+            return logits
+
+    return jax.jit(step)
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (L,) int32
+    max_new: int = 16
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class BatchedServer:
+    """Slot-based continuous batching (greedy sampling).
+
+    Prompts are fed token-by-token through the decode step (prefill-by-
+    decode; fine at demo scale — the prefill dry-run path covers the bulk
+    prefill compute on the production mesh).
+    """
+
+    def __init__(self, model, params, *, max_batch: int = 4,
+                 max_seq: int = 256,
+                 rules: Optional[MeshRules] = None):
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.step_fn = make_serve_step(model, rules=rules)
+        self.cache = model.init_cache(max_batch, max_seq)
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.slot_pos = [0] * max_batch
+        self.pending: "queue.Queue[Request]" = queue.Queue()
+        self.completed: List[Request] = []
+        self.pos = 0                # global position (lockstep decode)
+
+    def submit(self, req: Request) -> None:
+        self.pending.put(req)
+
+    def _fill_slots(self) -> None:
+        for i in range(self.max_batch):
+            if self.slots[i] is None and not self.pending.empty():
+                self.slots[i] = self.pending.get()
+                self.slot_pos[i] = 0
+
+    def _current_tokens(self) -> np.ndarray:
+        toks = np.zeros((self.max_batch, 1), np.int32)
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            p = self.slot_pos[i]
+            if p < len(req.prompt):
+                toks[i, 0] = req.prompt[p]
+            elif req.out:
+                toks[i, 0] = req.out[-1]
+        return toks
+
+    def step(self) -> None:
+        self._fill_slots()
+        if all(s is None for s in self.slots):
+            return
+        toks = jnp.asarray(self._current_tokens())
+        logits, self.cache = self.step_fn(
+            self.params, self.cache, toks, jnp.int32(self.pos))
+        nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            self.slot_pos[i] += 1
+            if self.slot_pos[i] >= len(req.prompt):
+                req.out.append(int(nxt[i]))
+                if len(req.out) >= req.max_new:
+                    req.done = True
+                    self.completed.append(req)
+                    self.slots[i] = None
+        self.pos += 1
+
+    def run_until_drained(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if (self.pending.empty()
+                    and all(s is None for s in self.slots)):
+                break
+            if self.pos >= self.max_seq - 1:
+                break
+            self.step()

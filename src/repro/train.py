@@ -1,0 +1,209 @@
+"""Training step factory + fault-tolerant training loop.
+
+``make_train_step`` builds the jit-able (params, opt, batch) -> (params,
+opt, metrics) function with:
+- microbatch gradient accumulation (lax.scan) — required to fit the 100B
+  archs' activations in 16 GB/chip;
+- per-layer remat (inside the models' scanned stacks);
+- cross-pod gradient modes: 'xla' (SPMD inserts the minimal sharded
+  all-reduce over 'pod') or 'compressed' (explicit shard_map over 'pod'
+  with int8 all-gather — 4x fewer DCN bytes, §Perf).
+
+``Trainer`` adds checkpoint/restart, heartbeats, straggler detection and
+failure injection around the step function.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import checkpoint as ckpt_lib
+from repro import optim
+from repro.collectives.compression import compressed_psum_mean
+from repro.data import DataConfig, Prefetcher, SyntheticCorpus
+from repro.elastic import HeartbeatMonitor, StragglerDetector
+from repro.sharding import MeshRules, use_rules
+
+
+def _split_micro(batch: Dict[str, jax.Array], accum: int):
+    def f(x):
+        return x.reshape((accum, x.shape[0] // accum) + x.shape[1:])
+    return {k: f(v) for k, v in batch.items()}
+
+
+def make_loss_and_grad(model, *, accum: int):
+    """Pod-local accumulated (loss, grads) over ``accum`` microbatches."""
+
+    def fn(params, batch):
+        micro = _split_micro(batch, accum)
+
+        def step(carry, mb):
+            loss_sum, grads = carry
+            (loss, _metrics), g = jax.value_and_grad(
+                model.loss, has_aux=True)(params, mb)
+            grads = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32), grads, g)
+            return (loss_sum + loss, grads), None
+
+        zero_g = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, grads), _ = jax.lax.scan(
+            step, (jnp.zeros((), jnp.float32), zero_g), micro)
+        inv = 1.0 / accum
+        return loss_sum * inv, jax.tree.map(lambda g: g * inv, grads)
+
+    return fn
+
+
+def make_train_step(model, ocfg: optim.AdamWConfig, *, accum: int = 1,
+                    rules: Optional[MeshRules] = None,
+                    cross_pod_mode: str = "xla"):
+    """Returns step(params, opt_state, batch) -> (params, opt, metrics)."""
+    lg = make_loss_and_grad(model, accum=accum)
+    mesh = rules.mesh if rules is not None else None
+    has_pod = mesh is not None and "pod" in mesh.axis_names
+
+    def base_step(params, opt_state, batch):
+        if cross_pod_mode == "compressed" and has_pod:
+            n_pods = mesh.shape["pod"]
+            from repro.sharding import use_rules, without_axes
+            inner_rules = (without_axes(rules, frozenset({"pod"}))
+                           if rules is not None else None)
+
+            def per_pod(params, batch):
+                batch = {k: v[0] for k, v in batch.items()}  # strip pod dim
+                with use_rules(inner_rules):  # 'pod' is manual in here
+                    loss, grads = lg(params, batch)
+                grads = jax.tree.map(
+                    lambda g: compressed_psum_mean(g, "pod", bits=8),
+                    grads)
+                return jax.lax.psum(loss, "pod") / n_pods, grads
+
+            # an explicit leading pod dim keeps the manual 'pod' axis off
+            # dims that are auto-sharded over 'data'
+            batch_p = {k: v.reshape((n_pods, v.shape[0] // n_pods)
+                                    + v.shape[1:])
+                       for k, v in batch.items()}
+            loss, grads = jax.shard_map(
+                per_pod, mesh=mesh,
+                in_specs=(jax.tree.map(lambda _: P(), params),
+                          jax.tree.map(lambda _: P("pod"), batch_p)),
+                out_specs=(P(), jax.tree.map(lambda _: P(), params)),
+                check_vma=False, axis_names={"pod"},
+            )(params, batch_p)
+        else:
+            loss, grads = lg(params, batch)
+        params, opt_state, om = optim.apply(ocfg, params, grads, opt_state)
+        metrics = {"loss": loss, **om}
+        return params, opt_state, metrics
+
+    return base_step
+
+
+def make_jitted_train_step(model, ocfg, *, accum, rules,
+                           param_shardings=None, opt_shardings=None,
+                           batch_sharding=None, cross_pod_mode="xla"):
+    step = make_train_step(model, ocfg, accum=accum, rules=rules,
+                           cross_pod_mode=cross_pod_mode)
+
+    def wrapped(params, opt_state, batch):
+        with use_rules(rules):
+            return step(params, opt_state, batch)
+
+    kw = {}
+    if param_shardings is not None:
+        kw["in_shardings"] = (param_shardings, opt_shardings,
+                              batch_sharding)
+        kw["out_shardings"] = (param_shardings, opt_shardings, None)
+    return jax.jit(wrapped, donate_argnums=(0, 1), **kw)
+
+
+# ---------------------------------------------------------------------------
+# fault-tolerant loop
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TrainerConfig:
+    n_steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    log_every: int = 10
+    accum: int = 1
+    async_ckpt: bool = True
+    heartbeat_timeout_s: float = 60.0
+
+
+class Trainer:
+    def __init__(self, model, ocfg: optim.AdamWConfig,
+                 tcfg: TrainerConfig, data_cfg: DataConfig, *,
+                 rules: Optional[MeshRules] = None,
+                 failure_hook: Optional[Callable[[int], bool]] = None):
+        self.model = model
+        self.ocfg = ocfg
+        self.tcfg = tcfg
+        self.data_cfg = data_cfg
+        self.rules = rules
+        self.failure_hook = failure_hook
+        self.heartbeat = HeartbeatMonitor(
+            timeout_s=tcfg.heartbeat_timeout_s)
+        self.straggler = StragglerDetector()
+        self.step_fn = make_jitted_train_step(
+            model, ocfg, accum=tcfg.accum, rules=rules)
+        self.history: list = []
+
+    def _init_state(self, seed: int = 0):
+        params = self.model.init(jax.random.key(seed))
+        return params, optim.init(self.ocfg, params)
+
+    def run(self, *, seed: int = 0, resume: bool = True
+            ) -> Dict[str, Any]:
+        tcfg = self.tcfg
+        start = 0
+        params, opt_state = self._init_state(seed)
+        if resume:
+            last = ckpt_lib.latest_step(tcfg.ckpt_dir)
+            if last is not None:
+                start, (params, opt_state) = ckpt_lib.restore(
+                    ckpt_lib.step_dir(tcfg.ckpt_dir, last),
+                    (params, opt_state))
+        corpus = SyntheticCorpus(self.data_cfg)
+        prefetch = Prefetcher(corpus, start_step=start)
+        pending = None
+        try:
+            for step in range(start, tcfg.n_steps):
+                if self.failure_hook and self.failure_hook(step):
+                    raise RuntimeError(f"injected failure at step {step}")
+                t0 = time.perf_counter()
+                _, batch = prefetch.next()
+                batch = {k: jnp.asarray(v) for k, v in batch.items()}
+                params, opt_state, metrics = self.step_fn(
+                    params, opt_state, batch)
+                dt = time.perf_counter() - t0
+                self.heartbeat.beat(worker=0, t=time.time())
+                self.straggler.record(dt)
+                if step % tcfg.log_every == 0:
+                    self.history.append(
+                        {"step": step,
+                         "loss": float(metrics["loss"]),
+                         "sec_per_step": dt})
+                if (step + 1) % tcfg.ckpt_every == 0:
+                    if pending is not None:
+                        pending.join()
+                    pending = ckpt_lib.save(
+                        ckpt_lib.step_dir(tcfg.ckpt_dir, step + 1),
+                        step + 1, (params, opt_state),
+                        blocking=not tcfg.async_ckpt)
+        finally:
+            if pending is not None:
+                pending.join()
+            prefetch.close()
+        return {"params": params, "opt_state": opt_state,
+                "history": self.history,
+                "stragglers": self.straggler.summary()}

@@ -1,0 +1,71 @@
+"""Job-level performance model: the §5.4 measured effects."""
+import pytest
+
+from repro.core.jct_model import (WORKLOADS, PlacementView, iteration_time,
+                                  jct_scale)
+
+
+def _view(types, per_gpu, transport="SHM", net_jobs=1):
+    return PlacementView(tuple(types), tuple(per_gpu), transport,
+                         concurrent_net_jobs=net_jobs)
+
+
+def test_1g10gb_single_instance_boost_10_to_30pct():
+    for name, w in WORKLOADS.items():
+        t5 = iteration_time(name, 64, _view(["1g.5gb"], [1], "NONE"),
+                            train=True)
+        t10 = iteration_time(name, 64, _view(["1g.10gb"], [1], "NONE"),
+                             train=True)
+        assert 1.08 <= t5 / t10 <= 1.32, name     # the paper's band
+
+
+def test_mixing_1g10_with_1g5_gives_no_benefit():
+    """size>=2: sync caps at the slowest leaf (§3.2)."""
+    pure = iteration_time("bert-base", 32,
+                          _view(["1g.5gb"] * 2, [1, 1]), train=True)
+    mixed = iteration_time("bert-base", 32,
+                           _view(["1g.5gb", "1g.10gb"], [1, 1]),
+                           train=True)
+    assert mixed >= pure * 0.999
+
+
+def test_placement_skew_degrades_fig9():
+    """6-0 worse than 5-1 worse than ... 3-3 (PCIe saturation)."""
+    times = []
+    for split in [(3, 3), (4, 2), (5, 1), (6, 0)]:
+        per = [s for s in split if s > 0]
+        times.append(iteration_time(
+            "bert-base", 32, _view(["1g.5gb"] * 6, per), train=True))
+    assert times == sorted(times)
+    assert times[-1] > times[0]                   # visible degradation
+
+
+def test_one_to_many_penalty_modest_fig10a():
+    """one-to-many vs one-to-one: <= ~10% at size 2 (paper Fig. 10a)."""
+    for name in WORKLOADS:
+        one = iteration_time(name, 32, PlacementView(
+            ("2g.10gb",), (1,), "NONE", sm_slices=2), train=True)
+        many = iteration_time(name, 32, _view(["1g.5gb"] * 2, [1, 1]),
+                              train=True)
+        assert many / one <= 1.12, name
+        assert many / one >= 0.99, name
+
+
+def test_net_contention_fig10b():
+    """Single NET stream can match SHM, but concurrency kills NET."""
+    shm = iteration_time("bert-base", 32,
+                         _view(["1g.5gb"] * 2, [2], "SHM"), train=True)
+    net1 = iteration_time("bert-base", 32,
+                          _view(["1g.5gb"] * 2, [1, 1], "NET",
+                                net_jobs=1), train=True)
+    net8 = iteration_time("bert-base", 32,
+                          _view(["1g.5gb"] * 2, [1, 1], "NET",
+                                net_jobs=8), train=True)
+    assert net1 <= shm * 1.05                     # NET-DIFF can win alone
+    assert net8 > net1                            # contention hurts NET
+
+
+def test_jct_scale_reference_is_unity():
+    for name in ("resnet50", "bert-base", "t5-small"):
+        assert jct_scale(name, 64, 4, _view(["1g.5gb"] * 4, [2, 2]),
+                         train=True) == pytest.approx(1.0, rel=1e-6)

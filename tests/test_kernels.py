@@ -1,0 +1,144 @@
+"""Per-kernel shape/dtype sweeps + allclose vs pure-jnp oracles
+(interpret=True executes kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.mamba_scan.ops import ssd
+from repro.kernels.mamba_scan.ref import ssd_ref
+from repro.kernels.mlstm.ops import mlstm
+from repro.kernels.mlstm.ref import mlstm_ref
+from repro.kernels.rmsnorm.ops import rmsnorm
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("S,H,Kv,D", [
+    (128, 4, 4, 64),      # MHA
+    (256, 4, 2, 64),      # GQA 2:1
+    (128, 8, 2, 128),     # GQA 4:1, MXU-width head
+    (192, 2, 1, 32),      # non-pow2 seq, MQA
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(S, H, Kv, D, causal, dtype):
+    ks = jax.random.split(jax.random.key(0), 3)
+    B = 2
+    q = jax.random.normal(ks[0], (B, S, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, Kv, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, Kv, D), dtype)
+    out = flash_attention(q, k, v, causal=causal, block_q=64, block_k=64)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_softcap():
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(ks[0], (1, 128, 2, 32))
+    k = jax.random.normal(ks[1], (1, 128, 2, 32))
+    v = jax.random.normal(ks[2], (1, 128, 2, 32))
+    out = flash_attention(q, k, v, causal=True, softcap=20.0,
+                          block_q=64, block_k=64)
+    ref = attention_ref(q, k, v, causal=True, softcap=20.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=6, deadline=None)
+@given(bq=st.sampled_from([32, 64, 128]), bk=st.sampled_from([32, 64]))
+def test_flash_attention_block_invariance(bq, bk):
+    """Property: output is independent of the BlockSpec tiling."""
+    ks = jax.random.split(jax.random.key(2), 3)
+    q = jax.random.normal(ks[0], (1, 128, 2, 32))
+    k = jax.random.normal(ks[1], (1, 128, 2, 32))
+    v = jax.random.normal(ks[2], (1, 128, 2, 32))
+    a = flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk)
+    b = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("T,H,P,G,N,chunk", [
+    (128, 4, 32, 1, 16, 32),
+    (128, 4, 32, 2, 16, 64),
+    (64, 2, 64, 2, 32, 16),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_kernel_sweep(T, H, P, G, N, chunk, dtype):
+    ks = jax.random.split(jax.random.key(3), 5)
+    B = 2
+    x = jax.random.normal(ks[0], (B, T, H, P), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, H))).astype(
+        jnp.float32)
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, T, G, N), dtype)
+    Cm = jax.random.normal(ks[4], (B, T, G, N), dtype)
+    y, s = ssd(x, dt, A, Bm, Cm, chunk=chunk)
+    yr, sr = ssd_ref(x, dt, A, Bm, Cm)
+    tol = dict(rtol=4e-2, atol=4e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), **tol)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr),
+                               rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("T,H,D,chunk", [
+    (128, 2, 32, 32),
+    (64, 4, 16, 16),
+    (96, 2, 64, 32),
+])
+def test_mlstm_kernel_sweep(T, H, D, chunk):
+    ks = jax.random.split(jax.random.key(4), 5)
+    B = 2
+    q = jax.random.normal(ks[0], (B, T, H, D))
+    k = jax.random.normal(ks[1], (B, T, H, D))
+    v = jax.random.normal(ks[2], (B, T, H, D))
+    i_raw = jax.random.normal(ks[3], (B, T, H)) * 2
+    f_raw = jax.random.normal(ks[4], (B, T, H)) * 2 + 3
+    h, (C, n, m) = mlstm(q, k, v, i_raw, f_raw, chunk=chunk)
+    hr, (Cr, nr, mr) = mlstm_ref(q, k, v, i_raw, f_raw)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr),
+                               rtol=5e-3, atol=5e-3)
+    np.testing.assert_allclose(np.asarray(C), np.asarray(Cr),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(m), np.asarray(mr),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("R,D", [(64, 128), (256, 512), (100, 96)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(R, D, dtype):
+    ks = jax.random.split(jax.random.key(5), 2)
+    x = jax.random.normal(ks[0], (R, D), dtype)
+    w = jax.random.normal(ks[1], (D,), jnp.float32)
+    out = rmsnorm(x, w)
+    ref = rmsnorm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(logf=st.floats(-5.0, 5.0), logi=st.floats(-5.0, 5.0))
+def test_mlstm_gate_stability_property(logf, logi):
+    """Property: extreme gate magnitudes never produce NaN/Inf (the
+    max-stabilizer contract)."""
+    B, T, H, D = 1, 32, 1, 8
+    ks = jax.random.split(jax.random.key(6), 3)
+    q = jax.random.normal(ks[0], (B, T, H, D))
+    k = jax.random.normal(ks[1], (B, T, H, D))
+    v = jax.random.normal(ks[2], (B, T, H, D))
+    i_raw = jnp.full((B, T, H), logi)
+    f_raw = jnp.full((B, T, H), logf)
+    h, _ = mlstm(q, k, v, i_raw, f_raw, chunk=16)
+    assert bool(jnp.all(jnp.isfinite(h)))

@@ -1,0 +1,122 @@
+"""Instance-selection policy (§3.2) and FM/DM/SM operation modes."""
+import pytest
+
+from repro.core.job import Job
+from repro.core.leaves import Cluster
+from repro.core.modes import (CKPT_LOAD_S, CKPT_SAVE_S, POD_CHURN_S,
+                              RECONFIGURE_S, DynamicMIG, FlexMIG,
+                              Placement, ReconfigPlan, StaticMIG)
+from repro.core.policy import select_instances, size_aware_priority
+
+
+def _job(size, kind="train", jid="j1"):
+    return Job(jid, "resnet50", kind, size, 256, 1000.0)
+
+
+def _fm_cluster():
+    c = Cluster(n_hosts=1, gpus_per_host=2)
+    FlexMIG().setup(c)
+    return c
+
+
+def test_size_aware_prioritization():
+    assert size_aware_priority(1)[0] == "1g.10gb"   # 10-30% JCT win
+    assert size_aware_priority(2)[0] == "1g.5gb"    # sync caps at slowest
+    assert size_aware_priority(8)[0] == "1g.5gb"
+
+
+def test_topology_aware_round_robin():
+    c = _fm_cluster()
+    chosen = select_instances(c, 0, 6, round_robin=True)
+    per_gpu = {}
+    for i in chosen:
+        per_gpu[i.gpu_id] = per_gpu.get(i.gpu_id, 0) + 1
+    assert sorted(per_gpu.values()) == [3, 3]       # the Fig. 9 optimum
+
+
+def test_packed_placement_is_uneven():
+    c = _fm_cluster()
+    chosen = select_instances(c, 6, round_robin=False) if False else \
+        select_instances(c, 0, 6, round_robin=False)
+    per_gpu = {}
+    for i in chosen:
+        per_gpu[i.gpu_id] = per_gpu.get(i.gpu_id, 0) + 1
+    assert max(per_gpu.values()) > 3                 # packs one GPU first
+
+
+def test_size1_gets_1g10gb():
+    c = _fm_cluster()
+    chosen = select_instances(c, 0, 1)
+    assert chosen[0].profile == "1g.10gb"
+
+
+def test_fm_placement_and_release():
+    c = _fm_cluster()
+    fm = FlexMIG()
+    pl = fm.try_place(_job(4), c)
+    assert isinstance(pl, Placement)
+    assert len(pl.instances) == 4
+    assert pl.transport == "SHM"
+    assert sorted(pl.leaves_per_gpu()) == [2, 2]
+    fm.release(pl, c)
+    assert len(c.idle_instances()) == 14
+
+
+def test_fm_never_needs_reconfig():
+    c = _fm_cluster()
+    fm = FlexMIG()
+    placements = []
+    for i, size in enumerate([6, 4, 2, 1]):
+        res = fm.try_place(_job(size, jid=f"j{i}"), c)
+        assert isinstance(res, Placement) or res is None
+        if isinstance(res, Placement):
+            placements.append(res)
+    # 6+4+2+1 = 13 <= 14 leaves: everything placed without reconfig
+    assert len(placements) == 4
+
+
+def test_sm_upgrade_rule():
+    c = Cluster(n_hosts=1, gpus_per_host=1)
+    sm = StaticMIG()
+    sm.setup(c)
+    p1 = sm.try_place(_job(1, jid="a"), c)
+    assert p1.instances[0].profile == "1g.10gb"     # exact fit first
+    p2 = sm.try_place(_job(1, jid="b"), c)
+    assert p2.instances[0].profile == "2g.10gb"     # upgrade to larger idle
+    assert sm.try_place(_job(6, jid="c"), c) is None  # unsupported size
+
+
+def test_dm_creates_then_drains():
+    c = Cluster(n_hosts=1, gpus_per_host=1)
+    dm = DynamicMIG()
+    dm.setup(c)
+    dm.register_inference([])
+    r1 = dm.try_place(_job(4, jid="a"), c)
+    assert isinstance(r1, ReconfigPlan)             # geometry change = drain
+    assert r1.affected_jobs == ()                   # idle GPU: cheap drain
+    pl1 = dm.apply_reconfig(r1, c)
+    assert pl1.instances[0].profile == "4g.20gb"
+    # a size-2 job now needs another repartition while 'a' runs
+    r2 = dm.try_place(_job(2, jid="b"), c)
+    assert isinstance(r2, ReconfigPlan)
+    assert r2.affected_jobs == ("a",)
+    assert r2.duration == pytest.approx(
+        RECONFIGURE_S + CKPT_SAVE_S + CKPT_LOAD_S + POD_CHURN_S)
+
+
+def test_dm_inference_never_drained():
+    c = Cluster(n_hosts=1, gpus_per_host=1)
+    dm = DynamicMIG()
+    dm.setup(c)
+    dm.register_inference(["inf"])
+    r1 = dm.apply_reconfig(
+        dm.try_place(_job(4, kind="inference", jid="inf"), c), c)
+    # the only GPU hosts an inference job -> no drain allowed
+    assert dm.try_place(_job(2, jid="b"), c) is None
+
+
+def test_reconfig_cost_structure():
+    plan = ReconfigPlan(0, 0, _job(2), ("a", "b", "c"))
+    assert plan.duration == pytest.approx(
+        RECONFIGURE_S + 3 * (CKPT_SAVE_S + CKPT_LOAD_S + POD_CHURN_S))
+    assert 100.0 <= RECONFIGURE_S <= 120.0          # §2.3.3 measurement

@@ -1,0 +1,87 @@
+"""MIG profile table, tree constraints (C1/C2), over-provisioning (I1)."""
+import pytest
+
+from repro.core import profiles as P
+from repro.core.leaves import Cluster, GPUState, _layout
+
+
+def test_profile_table_matches_paper_table3():
+    assert P.PROFILES["1g.5gb"].max_per_gpu == 7
+    assert P.PROFILES["1g.10gb"].max_per_gpu == 4
+    assert P.PROFILES["2g.10gb"].max_per_gpu == 3
+    assert P.PROFILES["3g.20gb"].max_per_gpu == 2
+    assert P.PROFILES["4g.20gb"].max_per_gpu == 1
+    assert P.PROFILES["7g.40gb"].max_per_gpu == 1
+    for name, prof in P.PROFILES.items():
+        i, g = name.split("g.")
+        assert prof.sm_slices == int(i)
+        assert prof.mem_gb == int(g.rstrip("gb"))
+
+
+def test_fixed_profiles_c1():
+    with pytest.raises(ValueError):
+        P.round_up_profile(9)
+    # 3g.15gb / 5g.25gb do not exist -> rounded up (paper Fig. 2)
+    assert P.round_up_profile(3) == "4g.20gb"
+    assert P.round_up_profile(5) == "7g.40gb"
+    assert P.overprovision_slices(3) == 1
+    assert P.overprovision_slices(5) == 2
+    assert P.overprovision_slices(6) == 1
+    assert P.overprovision_slices(4) == 0
+
+
+def test_tree_constrained_merging_c2():
+    # Fig 3a: slices (0,1) share a parent -> mergeable; (1,2) do not
+    assert P.mergeable(0, 1)
+    assert P.mergeable(2, 3)
+    assert not P.mergeable(1, 2)
+    assert not P.mergeable(3, 4)
+
+
+def test_gpu_placement_respects_tree():
+    gpu = GPUState(0, 0)
+    gpu.create_instance("2g.10gb", "a")      # takes {0,1}
+    gpu.create_instance("2g.10gb", "b")      # takes {2,3}
+    # 3g.20gb placements are {0,1,2} and {4,5,6}: only the latter is free
+    place = gpu.valid_placement("3g.20gb")
+    assert place == frozenset({4, 5, 6})
+    gpu.create_instance("3g.20gb", "c")
+    assert gpu.valid_placement("1g.5gb") is None  # memory exhausted? no:
+    # 2+2+4 mem slices used = 8 -> full
+
+
+def test_flexmig_partition_fills_gpu():
+    cluster = Cluster(n_hosts=1, gpus_per_host=1)
+    cluster.partition_all(P.FLEXMIG_PARTITION)
+    gpu = cluster.gpus[(0, 0)]
+    assert len(gpu.instances) == 7
+    mem = sum(P.PROFILES[i.profile].mem_gb for i in gpu.instances)
+    assert mem == 40                          # 6x5 + 10: no stranded memory
+
+
+def test_static_partition_valid():
+    cluster = Cluster(n_hosts=1, gpus_per_host=1)
+    cluster.partition_all(P.STATIC_PARTITION)
+    profs = sorted(i.profile for i in cluster.gpus[(0, 0)].instances)
+    assert profs == ["1g.10gb", "2g.10gb", "4g.20gb"]
+
+
+def test_layout_backtracking():
+    assert _layout(["4g.20gb", "2g.10gb", "1g.10gb"]) is not None
+    assert _layout(["4g.20gb", "4g.20gb"]) is None
+    assert _layout(["7g.40gb"]) is not None
+    assert _layout(["3g.20gb", "3g.20gb"]) is not None
+    # two 3g.20gb exhaust all 8 memory slices: nothing else fits
+    assert _layout(["3g.20gb", "3g.20gb", "1g.5gb"]) is None
+
+
+def test_repartition_preserves_running():
+    gpu = GPUState(0, 0)
+    a = gpu.create_instance("1g.5gb", "a")
+    a.job_id = "j1"
+    gpu.create_instance("1g.5gb", "idle")
+    assert gpu.could_fit_after_repartition("4g.20gb")
+    inst = gpu.repartition_for("4g.20gb", "new")
+    assert inst.profile == "4g.20gb"
+    live = {i.uuid for i in gpu.instances}
+    assert live == {"a", "new"}               # idle destroyed, running kept

@@ -1,0 +1,93 @@
+"""§4.2 runtime layer: peer discovery, synthetic bus-ID labeling."""
+import pytest
+
+from repro.core.registry import (DuplicateGpuError, InvalidBusIdError,
+                                 PeerInfo, TopologyMismatchError,
+                                 build_topology, driver_call_guard,
+                                 env_to_peer, form_communicator,
+                                 is_synthetic, peer_discovery,
+                                 restore_bus_id, select_transport)
+
+
+def _peers():
+    return [
+        PeerInfo(0, 0, 111, 1, "00:4B:00.0", "MIG-aaa"),
+        PeerInfo(1, 0, 111, 2, "00:4B:00.0", "MIG-bbb"),
+        PeerInfo(2, 0, 111, 3, "00:4C:00.0", "MIG-ccc"),
+    ]
+
+
+def test_stock_nccl_aborts_on_same_busid():
+    """Failure point 1 (§2.5): false duplicate-GPU detection."""
+    with pytest.raises(DuplicateGpuError):
+        peer_discovery(_peers(), mig_aware=False)
+
+
+def test_mig_aware_discovery_passes():
+    peer_discovery(_peers(), mig_aware=True)  # no raise
+
+
+def test_same_instance_double_bind_still_detected():
+    peers = _peers() + [PeerInfo(3, 0, 111, 4, "00:4B:00.0", "MIG-aaa")]
+    with pytest.raises(DuplicateGpuError):
+        peer_discovery(peers, mig_aware=True)
+
+
+def test_missing_mig_id_detected():
+    peers = [PeerInfo(0, 0, 1, 1, "00:4B:00.0", None),
+             PeerInfo(1, 0, 1, 2, "00:4B:00.0", None)]
+    with pytest.raises(DuplicateGpuError):
+        peer_discovery(peers, mig_aware=True)
+
+
+def test_stock_topology_collapses_instances():
+    """Failure point 2: dedup collapses nodes -> fewer devices than
+    ranks."""
+    nodes = build_topology(_peers(), synthetic_labeling=False)
+    assert len(nodes) == 2
+    with pytest.raises(TopologyMismatchError):
+        form_communicator(_peers(), mig_aware=True,
+                          synthetic_labeling=False)
+
+
+def test_synthetic_labeling_makes_unique_nodes():
+    nodes = build_topology(_peers(), synthetic_labeling=True)
+    assert len(nodes) == 3
+    labels = [n.label for n in nodes]
+    assert labels == ["00:4B:00.0", "00:4B:00.1", "00:4C:00.0"]
+    assert len(set(labels)) == 3
+
+
+def test_restoration_routine():
+    """The paper's example: 00:4B:00.0 -> 00:4B:00.1 and back."""
+    assert restore_bus_id("00:4B:00.1") == "00:4B:00.0"
+    assert restore_bus_id("00:4B:00.0") == "00:4B:00.0"
+    assert is_synthetic("00:4B:00.3")
+    assert not is_synthetic("00:4B:00.0")
+    assert driver_call_guard("00:4B:00.2") == "00:4B:00.0"
+
+
+def test_full_bootstrap():
+    nodes = form_communicator(_peers(), mig_aware=True,
+                              synthetic_labeling=True)
+    assert len(nodes) == 3
+
+
+def test_same_host_different_gpus_ok_without_mig():
+    peers = [PeerInfo(0, 0, 1, 1, "00:4B:00.0"),
+             PeerInfo(1, 0, 1, 2, "00:4C:00.0")]
+    peer_discovery(peers, mig_aware=False)    # distinct bus ids: fine
+
+
+def test_transport_selection():
+    a = PeerInfo(0, 0, 1, 1, "00:4B:00.0", "MIG-a")
+    b = PeerInfo(1, 0, 1, 2, "00:4B:00.0", "MIG-b")
+    c = PeerInfo(2, 0, 2, 3, "00:4B:00.0", "MIG-c")
+    assert select_transport(a, b) == "SHM"    # same host
+    assert select_transport(a, c) == "NET"    # cross host
+
+
+def test_env_plumbing():
+    p = env_to_peer(0, {"NVIDIA_VISIBLE_DEVICES": "MIG-xyz"},
+                    host_hash=7, pid_hash=1, pcie_bus_id="00:4B:00.0")
+    assert p.mig_id == "MIG-xyz"

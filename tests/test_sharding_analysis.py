@@ -1,0 +1,114 @@
+"""Sharding rules, HLO analysis parser, serve batcher."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import hlo as H
+from repro.models.registry import ARCH_IDS, build_model, get_config, \
+    reduced_config
+from repro.serve import BatchedServer, Request
+from repro.sharding import MeshRules, single_device_rules, use_rules
+from tests.conftest import run_multidevice
+
+
+def test_type_bytes():
+    assert H.type_bytes("f32[128,256]{1,0}") == 128 * 256 * 4
+    assert H.type_bytes("bf16[2,3]") == 12
+    assert H.type_bytes("(s32[], f32[8])") == 4 + 32
+    assert H.type_bytes("pred[]") == 1
+
+
+def test_hlo_analysis_counts_while_trip():
+    """dot inside a scanned body must be multiplied by the trip count."""
+    def f(w, x):
+        def body(h, _):
+            return jnp.tanh(h @ w), None
+        h, _ = jax.lax.scan(body, x, None, length=7)
+        return h
+    lowered = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((64, 64), jnp.float32),
+        jax.ShapeDtypeStruct((8, 64), jnp.float32))
+    stats = H.analyze(lowered.compile().as_text())
+    want = 7 * 2 * 8 * 64 * 64
+    assert stats.dot_flops == pytest.approx(want, rel=0.01)
+
+
+def test_hlo_analysis_collectives_multidevice():
+    out = run_multidevice("""
+        import jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.analysis import hlo as H
+        mesh = jax.make_mesh((8,), ("d",))
+        def f(x):
+            return jax.lax.with_sharding_constraint(
+                x.sum(axis=0, keepdims=True), NamedSharding(mesh, P()))
+        j = jax.jit(f, in_shardings=NamedSharding(mesh, P("d")),
+                    out_shardings=NamedSharding(mesh, P()))
+        txt = j.lower(jax.ShapeDtypeStruct((8, 1024), jnp.float32)
+                      ).compile().as_text()
+        stats = H.analyze(txt)
+        assert stats.collective_bytes > 0, txt[:2000]
+        assert any("all-reduce" in k or "all-gather" in k
+                   for k in stats.collective_ops), stats.collective_ops
+        print("HLO_COLL_OK")
+        """)
+    assert "HLO_COLL_OK" in out
+
+
+def test_rules_divisibility_dropping():
+    """Non-dividing dims silently stay replicated (whisper's 6 heads on a
+    16-way axis)."""
+    out = run_multidevice("""
+        import jax, jax.numpy as jnp
+        from repro.sharding import make_rules, use_rules, shard
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        rules = make_rules(mesh)
+        with mesh:
+            with use_rules(rules):
+                def f(x):
+                    return shard(x, "batch", None, "heads", None)
+                x = jnp.ones((4, 8, 6, 16))    # 6 heads !% 4
+                y = jax.jit(f)(x)
+                assert y.shape == x.shape
+                x2 = jnp.ones((4, 8, 8, 16))   # 8 heads % 4 == 0
+                y2 = jax.jit(f)(x2)
+        print("RULES_OK")
+        """, n_devices=8)
+    assert "RULES_OK" in out
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_tree_shardings_cover_params(arch):
+    """tree_shardings produces a NamedSharding for every param leaf on the
+    production mesh shape (checked abstractly via rules=None here; the
+    full-mesh check runs inside the dry-run)."""
+    cfg = reduced_config(get_config(arch))
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init, jax.random.key(0))
+    axes = model.param_logical_axes()
+    n_p = len(jax.tree.leaves(params))
+    n_a = len(jax.tree.leaves(
+        axes, is_leaf=lambda v: isinstance(v, tuple)))
+    assert n_p == n_a
+
+
+def test_single_device_rules_noop():
+    with use_rules(single_device_rules()):
+        x = jnp.ones((4, 4))
+        from repro.sharding import shard
+        y = shard(x, "batch", "heads")
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_batched_server_continuous_batching():
+    cfg = reduced_config(get_config("llama3.2-1b"))
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.key(0))
+    srv = BatchedServer(model, params, max_batch=2, max_seq=32)
+    for i in range(3):                        # 3 requests, 2 slots
+        srv.submit(Request(i, np.array([5 + i, 6, 7], np.int32),
+                           max_new=4))
+    srv.run_until_drained()
+    assert len(srv.completed) == 3
+    assert all(len(r.out) == 4 for r in srv.completed)

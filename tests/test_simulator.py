@@ -1,0 +1,122 @@
+"""Simulator invariants + paper-claim checks, incl. hypothesis properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.job import Job
+from repro.core.metrics import ModeComparison
+from repro.core.simulator import simulate
+from repro.core.traces import (ALL_CATEGORIES, TraceCategory,
+                               generate_trace, models_for)
+
+
+def _trace(seed=0, size_dist="balanced", mix="train", max_size=4):
+    return generate_trace(TraceCategory("philly", size_dist, mix),
+                          seed=seed, double=False, max_size=max_size)
+
+
+def test_all_jobs_complete_every_mode():
+    jobs = _trace()
+    for mode in ("FM", "DM", "SM"):
+        r = simulate(jobs, mode)
+        assert r.n_jobs == len(jobs), mode
+
+
+def test_fm_never_reconfigures():
+    r = simulate(_trace(), "FM")
+    assert r.n_reconfigs == 0
+
+
+def test_fm_no_external_fragmentation():
+    r = simulate(_trace(), "FM")
+    assert r.avg_ext_frag_delay == pytest.approx(0.0, abs=1.0)
+
+
+def test_dm_reconfigures_under_churn():
+    r = simulate(_trace(size_dist="small"), "DM")
+    assert r.n_reconfigs > 0
+
+
+def test_utilization_bounded():
+    for mode in ("FM", "DM", "SM"):
+        r = simulate(_trace(), mode)
+        assert 0.0 < r.utilization <= 1.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       size_dist=st.sampled_from(["small", "balanced", "large"]),
+       mode=st.sampled_from(["FM", "DM", "SM"]),
+       policy=st.sampled_from(["fifo", "backfill"]))
+def test_property_invariants(seed, size_dist, mode, policy):
+    jobs = _trace(seed=seed, size_dist=size_dist)
+    r = simulate(jobs, mode, policy=policy)
+    # conservation: every job finishes exactly once
+    assert r.n_jobs == len(jobs)
+    # causality: waits and JCTs non-negative
+    assert all(w >= -1e-9 for w in r.wait_by_job.values())
+    assert all(j > 0 for j in r.jct_by_job.values())
+    # makespan dominates the longest single execution
+    assert r.makespan >= max(r.jct_by_job.values()) - 1e-6
+    assert 0.0 < r.utilization <= 1.0 + 1e-9
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_property_fm_beats_dm_makespan_mostly(seed):
+    """The paper's headline direction (not magnitude): FM makespan <= DM
+    within tolerance on FIFO train traces."""
+    jobs = _trace(seed=seed, size_dist="large")
+    fm = simulate(jobs, "FM")
+    dm = simulate(jobs, "DM")
+    assert fm.makespan <= dm.makespan * 1.10
+
+
+def test_paper_claims_fm_vs_dm():
+    """§5.3: FM lowers waiting (~11% vs DM), JCT within +10%, shorter
+    makespan; averaged over categories."""
+    ratios = []
+    for seed in range(5):
+        jobs = generate_trace(
+            TraceCategory("helios_earth", "large", "train"),
+            seed=seed, double=True, max_size=4)
+        fm = simulate(jobs, "FM")
+        dm = simulate(jobs, "DM")
+        ratios.append(ModeComparison.of(fm, dm))
+    mk = np.mean([r.makespan_ratio for r in ratios])
+    wait = np.mean([r.wait_ratio for r in ratios])
+    jct = np.mean([r.jct_ratio for r in ratios])
+    assert mk < 1.0                               # shorter makespan
+    assert wait < 0.95                            # visibly lower waiting
+    assert jct < 1.15                             # modest per-job penalty
+
+
+def test_backfill_helps_or_equal():
+    jobs = _trace(size_dist="small", mix="mixed", max_size=None)
+    f = simulate(jobs, "FM", policy="fifo")
+    b = simulate(jobs, "FM", policy="backfill")
+    # backfilling reliably reduces waiting; makespan can shift either way
+    # slightly as jobs reorder
+    assert b.avg_wait <= f.avg_wait * 1.02
+    assert b.makespan <= f.makespan * 1.15
+
+
+def test_calibration_factor_increases_jct():
+    jobs = _trace()
+    cal = simulate(jobs, "FM", calibrate=True)
+    raw = simulate(jobs, "FM", calibrate=False)
+    assert cal.avg_jct >= raw.avg_jct
+
+
+def test_trace_generator_categories():
+    assert len(ALL_CATEGORIES) == 36              # 4 x 3 x 3
+    jobs = generate_trace(ALL_CATEGORIES[0], seed=1, double=True)
+    assert len(jobs) >= 60                        # ~62-64 doubled jobs
+    assert all(j.base_duration >= 600 for j in jobs)
+    assert all(j.base_duration <= 7200 for j in jobs)
+
+
+def test_models_for_size():
+    assert "resnet50" in models_for("train", 4)
+    assert "resnet18" not in models_for("train", 4)
+    assert "resnet101" not in models_for("inference", 1)
