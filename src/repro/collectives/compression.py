@@ -12,6 +12,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import parallel as PX
+
 
 def quantize_int8(x) -> Tuple[jax.Array, jax.Array]:
     xf = x.astype(jnp.float32)
@@ -30,14 +32,14 @@ def compressed_psum_mean(x, axis: str, *, bits: int = 8):
     Runs inside shard_map.  bits=16 casts to bf16 (psum native); bits=8
     all_gathers int8 + per-shard scales and averages locally.
     """
-    n = jax.lax.axis_size(axis)
+    n = PX.axis_size(axis)
     if bits == 16:
-        y = jax.lax.psum(x.astype(jnp.bfloat16), axis)
+        y = PX.psum(x.astype(jnp.bfloat16), axis)
         return (y.astype(jnp.float32) / n).astype(x.dtype)
     assert bits == 8, bits
     q, scale = quantize_int8(x)
-    qs = jax.lax.all_gather(q, axis, axis=0, tiled=False)      # (n, ...)
-    ss = jax.lax.all_gather(scale, axis, axis=0, tiled=False)  # (n,)
+    qs = PX.all_gather(q, axis, gather_axis=0, tiled=False)      # (n, ...)
+    ss = PX.all_gather(scale, axis, gather_axis=0, tiled=False)  # (n,)
     deq = qs.astype(jnp.float32) * ss.reshape((n,) + (1,) * x.ndim)
     return (jnp.sum(deq, axis=0) / n).astype(x.dtype)
 

@@ -11,7 +11,9 @@ the hierarchical schedule explicitly:
 
 which moves only 1/F of the tensor across the slow boundary (F = fast-axis
 size) instead of the whole tensor — exactly the paper's "keep bulk traffic
-on SHM, not NET" principle.  Measured in lowered-HLO collective bytes by
+on SHM, not NET" principle.  Fast/slow classification comes from
+``repro.parallel.transport`` (the same tier map the analytic bandwidth
+model prices), measured in lowered-HLO collective bytes by
 benchmarks/fig11_allreduce_bw.py and used by the train step's
 ``cross_pod_grad_mode='hier*'`` paths.
 """
@@ -24,18 +26,20 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import parallel as PX
 from repro.collectives.compression import compressed_psum_mean
+from repro.parallel.transport import is_slow_axis
 
 
 def _flat_psum_scatter(x, axis):
     """reduce-scatter along leading dim over ``axis`` (pads if needed)."""
-    n = jax.lax.axis_size(axis)
+    n = PX.axis_size(axis)
     flat = x.reshape(-1)
     pad = (-flat.shape[0]) % n
     if pad:
         flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
-    return jax.lax.psum_scatter(flat.reshape(n, -1), axis,
-                                scatter_dimension=0, tiled=False), pad
+    return PX.psum_scatter(flat.reshape(n, -1), axis,
+                           scatter_dimension=0, tiled=False), pad
 
 
 def hier_all_reduce_mean(x, *, fast_axis: str, slow_axis: Optional[str],
@@ -46,17 +50,17 @@ def hier_all_reduce_mean(x, *, fast_axis: str, slow_axis: Optional[str],
     compress_bits: 0 (full precision) | 16 (bf16) | 8 (int8+scale) for the
     slow hop only.
     """
-    nf = jax.lax.axis_size(fast_axis)
+    nf = PX.axis_size(fast_axis)
     shard, pad = _flat_psum_scatter(x, fast_axis)      # fast reduce-scatter
     if slow_axis is not None:
         if compress_bits:
             shard = compressed_psum_mean(shard, slow_axis,
                                          bits=compress_bits)
         else:
-            ns = jax.lax.axis_size(slow_axis)
-            shard = jax.lax.psum(shard, slow_axis) / ns
-    full = jax.lax.all_gather(shard, fast_axis, axis=0,
-                              tiled=False)             # fast all-gather
+            ns = PX.axis_size(slow_axis)
+            shard = PX.psum(shard, slow_axis) / ns
+    full = PX.all_gather(shard, fast_axis, gather_axis=0,
+                         tiled=False)                  # fast all-gather
     flat = full.reshape(-1)
     if pad:
         flat = flat[:-pad]
@@ -68,8 +72,8 @@ def flat_all_reduce_mean(x, *, axes: Tuple[str, ...]):
     schedule the paper's stock-NCCL workaround forces)."""
     n = 1
     for ax in axes:
-        n *= jax.lax.axis_size(ax)
-    return jax.lax.psum(x, axes) / n
+        n *= PX.axis_size(ax)
+    return PX.psum(x, axes) / n
 
 
 def make_hier_all_reduce(mesh: Mesh, *, fast_axis: str = "data",
@@ -79,7 +83,13 @@ def make_hier_all_reduce(mesh: Mesh, *, fast_axis: str = "data",
 
     Input is expected replicated over 'model' and sharded/replicated over
     (pod, fast) as P() — each (pod, data) cell holds its local copy.
+    The default fast/slow split matches the transport tier map; passing a
+    slow axis as ``fast_axis`` (or vice versa) is almost certainly a bug.
     """
+    assert not is_slow_axis(fast_axis), (
+        f"fast_axis {fast_axis!r} is a slow-transport axis")
+    assert slow_axis is None or is_slow_axis(slow_axis), (
+        f"slow_axis {slow_axis!r} is a fast-transport axis")
     axes = tuple(a for a in (fast_axis, slow_axis) if a in mesh.axis_names)
     slow = slow_axis if (slow_axis and slow_axis in mesh.axis_names) \
         else None
@@ -90,7 +100,7 @@ def make_hier_all_reduce(mesh: Mesh, *, fast_axis: str = "data",
         return hier_all_reduce_mean(x, fast_axis=fast_axis, slow_axis=slow,
                                     compress_bits=compress_bits)
 
-    return jax.jit(jax.shard_map(
+    return jax.jit(PX.shard_map(
         fn, mesh=mesh,
         in_specs=P(axes),           # distinct value per (pod,data) cell
         out_specs=P(axes),          # mean broadcast back to every cell

@@ -11,17 +11,13 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Tuple
 
-# GPU-side effective bandwidths (GB/s), consistent with core/jct_model.py
-SHM_STREAM_GBPS = 12.0
-PCIE_GBPS = 20.0
-NET_GBPS = 8.0
-NET_LATENCY_S = 12e-6
-SHM_LATENCY_S = 4e-6
-
-# TPU v5e-ish fabric constants (per chip)
-ICI_GBPS_PER_LINK = 50.0
-ICI_LINKS = 4
-DCN_GBPS_PER_HOST = 6.25          # 50 Gb/s NIC per host
+# Canonical tier constants live in the runtime layer so the analytic model
+# and the executable collectives (repro.collectives.hierarchical) price
+# and name the same transports; re-exported here for back-compat.
+from repro.parallel.transport import (DCN_GBPS_PER_HOST, ICI_GBPS_PER_LINK,
+                                      ICI_LINKS, NET_GBPS, NET_LATENCY_S,
+                                      PCIE_GBPS, SHM_LATENCY_S,
+                                      SHM_STREAM_GBPS, TIERS)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,11 +50,11 @@ def gpu_collective(op: str, nbytes: float, *, transport: str,
     traffic = _ring_factor(op, n) * nbytes
     if transport == "SHM":
         worst = max(leaves_per_gpu) if leaves_per_gpu else 1
-        bw = min(SHM_STREAM_GBPS, PCIE_GBPS / max(1, worst))
-        lat = SHM_LATENCY_S
+        bw = min(TIERS["SHM"].gbps, PCIE_GBPS / max(1, worst))
+        lat = TIERS["SHM"].latency_s
     else:
-        bw = NET_GBPS / max(1, concurrent_net_jobs)
-        lat = NET_LATENCY_S
+        bw = TIERS["NET"].gbps / max(1, concurrent_net_jobs)
+        lat = TIERS["NET"].latency_s
     t = traffic / (bw * 1e9) + lat * max(1, n - 1)
     bus = (nbytes * _ring_factor(op, n)) / t / 1e9 if t > 0 else 0.0
     return CollectivePerf(transport, n, nbytes, bus, t)
@@ -71,11 +67,8 @@ def tpu_collective_time(op: str, nbytes_per_chip: float, *, n_chips: int,
     if n_chips <= 1:
         return 0.0
     traffic = _ring_factor(op, n_chips) * nbytes_per_chip
-    if axis == "ici":
-        bw = ICI_GBPS_PER_LINK * 1e9          # per-link serial model
-    else:
-        bw = DCN_GBPS_PER_HOST * 1e9
-    return traffic / bw
+    tier = TIERS["ICI" if axis == "ici" else "DCN"]
+    return traffic / (tier.gbps * 1e9)        # per-link serial model
 
 
 def hierarchical_vs_flat_bytes(nbytes: float, *, fast: int,

@@ -24,12 +24,13 @@ import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
 # --- hardware constants (A100-40GB PCIe testbed, Appendix B) --------------
+# Transport bandwidths come from the runtime layer's canonical tier table
+# so this model prices the same SHM/NET cliff the collectives implement.
+from repro.parallel.transport import (NET_GBPS, PCIE_GBPS,  # noqa: E402
+                                      SHM_STREAM_GBPS)
+
 A100_TFLOPS = 312.0               # fp16 dense
 LEAF_TFLOPS = A100_TFLOPS / 7.0   # one 1g slice
-PCIE_GBPS = 20.0                  # practical per-GPU PCIe gen4 x16
-SHM_STREAM_GBPS = 12.0            # per-leaf-pair host-shm effective
-NET_GBPS = 8.0                    # RDMA via host NIC: effective per-stream
-                                  # (NCCL loopback; Fig 11: below SHM intra-GPU)
 SYNC_OVERHEAD_FRAC = 0.04         # per-iteration barrier cost (of compute);
                                   # calibrated to the paper's ~4% avg one-to-
                                   # many JCT penalty (§5.3)

@@ -205,6 +205,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
                           + mem.temp_size_in_bytes) < 16e9,
         }
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):   # older jax: one dict per device
+            ca = ca[0] if ca else {}
         meta["cost_analysis"] = {
             "flops": float(ca.get("flops", 0.0)),
             "bytes_accessed": float(ca.get("bytes accessed", 0.0)),

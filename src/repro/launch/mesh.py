@@ -14,13 +14,8 @@ from jax.sharding import Mesh
 
 from repro.core.aggregation import leaves_to_mesh
 from repro.core.leaves import TpuLeaf, TpuSliceTopology
+from repro.parallel.mesh import make_production_mesh  # noqa: F401 (re-export)
 from repro.sharding import MeshRules, make_rules
-
-
-def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
 
 
 def production_rules(mesh: Mesh, *, long_ctx: bool = False,

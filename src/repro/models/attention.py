@@ -21,6 +21,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 from repro.models import layers as L
+from repro import parallel as PX
 from repro.sharding import current_rules, shard
 
 
@@ -31,7 +32,7 @@ def _kv_seq_axes():
     ax = rules.rules.get("kv_seq")
     if ax is None:
         return (), rules
-    return ((ax,) if isinstance(ax, str) else tuple(ax)), rules
+    return PX.axis_tuple(ax), rules
 
 
 def _local_partial_softmax(q, k, v, valid, *, chunk: int = 1024,
@@ -87,8 +88,9 @@ def sharded_decode_attention(q, k_cache, v_cache, pos, *,
     G = H // Kv
     qg = q.reshape(B, 1, Kv, G, D)
 
-    if not seq_axes or S % math.prod(
-            rules.mesh.shape[a] for a in seq_axes):
+    mesh = rules.mesh if rules is not None else None
+    n_shards = PX.axes_size(mesh, seq_axes) if seq_axes else 1
+    if n_shards == 1 or S % n_shards:
         # single-shard chunked path (still O(chunk) memory)
         valid = jnp.arange(S) < pos + 1
         m, l, acc = _local_partial_softmax(qg, k_cache, v_cache, valid,
@@ -96,33 +98,37 @@ def sharded_decode_attention(q, k_cache, v_cache, pos, *,
         out = acc / jnp.maximum(l[..., None], 1e-30)
         return out.reshape(B, 1, H, Dv).astype(q.dtype)
 
-    mesh = rules.mesh
-    n_shards = math.prod(mesh.shape[a] for a in seq_axes)
     S_loc = S // n_shards
-    other = frozenset(a for a in mesh.axis_names if a not in seq_axes)
+    # every mesh axis is mapped manually (partially-auto shard_maps crash
+    # XLA's SPMD partitioner on older JAX), so the batch sharding must be
+    # spelled out explicitly; axes that don't divide B stay replicated,
+    # mirroring sharding.shard()'s drop rule
+    batch_ax = tuple(a for a in PX.axis_tuple(rules.rules.get("kv_batch"))
+                     if a not in seq_axes)
+    if not batch_ax or B % PX.axes_size(mesh, batch_ax):
+        batch_ax = None
+    # each shard's KV start offset rides in as a P(seq_axes)-sharded
+    # operand instead of axis_index arithmetic: axis_index lowers to a
+    # PartitionId op some XLA versions reject, a sharded iota never is
+    starts = (jnp.arange(n_shards, dtype=jnp.int32) * S_loc)
 
-    def mapped(qg, k, v, pos):
-        idx = jnp.int32(0)
-        for a in seq_axes:
-            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
-        start = idx * S_loc
-        valid = (start + jnp.arange(S_loc)) < pos + 1
+    def mapped(qg, k, v, pos, start):
+        valid = (start[0] + jnp.arange(S_loc)) < pos + 1
         m, l, acc = _local_partial_softmax(qg, k, v, valid,
                                            softcap=softcap)
-        gm = jax.lax.pmax(m, seq_axes)
+        gm = PX.pmax(m, seq_axes)
         corr = jnp.exp(m - gm)
-        l = jax.lax.psum(l * corr, seq_axes)
-        acc = jax.lax.psum(acc * corr[..., None], seq_axes)
+        l = PX.psum(l * corr, seq_axes)
+        acc = PX.psum(acc * corr[..., None], seq_axes)
         return acc / jnp.maximum(l[..., None], 1e-30)
 
-    out = jax.shard_map(
+    out = PX.shard_map(
         mapped, mesh=mesh,
-        in_specs=(P(), P(None, seq_axes, None, None),
-                  P(None, seq_axes, None, None), P()),
-        out_specs=P(),
+        in_specs=(P(batch_ax), P(batch_ax, seq_axes, None, None),
+                  P(batch_ax, seq_axes, None, None), P(), P(seq_axes)),
+        out_specs=P(batch_ax),
         check_vma=False,
-        axis_names=set(seq_axes),
-    )(qg, k_cache, v_cache, pos)
+    )(qg, k_cache, v_cache, pos, starts)
     return out.reshape(B, 1, H, Dv).astype(q.dtype)
 
 

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, MoEConfig
 from repro.models import layers as L
+from repro import parallel as PX
 from repro.sharding import batch_axes, current_rules, shard
 
 
@@ -115,7 +116,7 @@ def _moe_local(x, router_w, w_gate, w_up, w_down, *, m: MoEConfig,
         gate = (top_p[:, j] * local[:, j]).astype(jnp.float32)
         out = out + contrib * gate[:, None]
     if model_axis is not None:
-        out = jax.lax.psum(out, model_axis)
+        out = PX.psum(out, model_axis)
 
     # --- aux losses (identical on every model shard; local-token means) ----
     dispatch_frac = jnp.mean(
@@ -149,15 +150,15 @@ def moe_apply(x, p, cfg: ArchConfig) -> Tuple[jax.Array, jax.Array]:
             f"experts {m.n_experts_padded} must divide model axis {n_model}")
 
         def mapped(xl, rw, wg, wu, wd):
-            idx = jax.lax.axis_index(model_ax)
+            idx = PX.axis_index(model_ax)
             out, aux = _moe_local(xl, rw, wg, wu, wd, m=m, shard_idx=idx,
                                   model_axis=model_ax)
             # aux identical across model shards; average over batch shards
             for ax in batch_axes(rules):
-                aux = jax.lax.pmean(aux, ax)
+                aux = PX.pmean(aux, ax)
             return out, aux
 
-        out, aux = jax.shard_map(
+        out, aux = PX.shard_map(
             mapped, mesh=mesh,
             in_specs=(P(bspec, None, None), P(None, None),
                       P(model_ax, None, None), P(model_ax, None, None),

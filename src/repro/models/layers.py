@@ -123,8 +123,14 @@ def _gqa_scores(q, k):
 
 
 def _gqa_out(p, v):
-    """p: (B, Kv, G, Sq, Sk) f32; v: (B, Sk, Kv, D) -> (B, Sq, Kv, G, D)."""
-    return jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v)
+    """p: (B, Kv, G, Sq, Sk) f32; v: (B, Sk, Kv, D) -> (B, Sq, Kv, G, D).
+
+    Probabilities stay f32 and the PV product accumulates in f32 (flash-
+    kernel convention); rounding p to bf16 costs ~0.4% per weight, which
+    is what pushed the expanded-vs-absorbed MLA logit diff over tolerance.
+    """
+    return jnp.einsum("bkgqs,bskd->bqkgd", p, v,
+                      preferred_element_type=jnp.float32)
 
 
 def blocked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
@@ -291,9 +297,12 @@ def softmax_xent(logits: jax.Array, targets: jax.Array,
                  z_loss: float = 1e-4) -> Tuple[jax.Array, jax.Array]:
     """logits (B,S,V) any dtype; targets (B,S) int.  Returns (loss, zl)."""
     lf = logits.astype(jnp.float32)
-    m = jnp.max(lf, axis=-1, keepdims=True)
-    shifted = lf - jax.lax.stop_gradient(m)
-    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    # the shift must be detached on BOTH sides: subtracting sg(m) but
+    # adding back a live m leaks an extra +1 into the argmax logit's
+    # gradient (d lse/dl = softmax + one_hot(argmax)), which suppresses
+    # whichever logit is currently winning and stalls training
+    m = jax.lax.stop_gradient(jnp.max(lf, axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1)) + m[..., 0]
     gold = jnp.take_along_axis(lf, targets[..., None], axis=-1)[..., 0]
     nll = lse - gold
     zl = z_loss * jnp.square(lse)

@@ -320,7 +320,11 @@ class TransformerLM:
         """Returns (logits, aux)."""
         cfg = self.cfg
         tokens = batch["tokens"]
-        x = params["embed"][tokens]           # (B, S, D)
+        # gather through f32 so the backward scatter-add (the embed
+        # gradient) accumulates in f32 — bf16 scatter accumulation is
+        # reduction-order sensitive and breaks accum-invariance
+        emb = params["embed"]
+        x = emb.astype(jnp.float32)[tokens].astype(emb.dtype)  # (B, S, D)
         if not cfg.use_rope and not cfg.is_encdec:
             x = x + L.sinusoidal_positions(
                 tokens.shape[1], cfg.d_model).astype(x.dtype)[None]
@@ -352,10 +356,15 @@ class TransformerLM:
         return logits, aux
 
     def _logits(self, params, x):
+        # f32 accumulation: the loss consumes logits in f32 anyway, and
+        # the backward of this einsum is the embed/lm_head gradient,
+        # which otherwise picks up partition-order-dependent bf16 noise
         if self.cfg.tie_embeddings:
-            logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+            logits = jnp.einsum("bsd,vd->bsv", x, params["embed"],
+                                preferred_element_type=jnp.float32)
         else:
-            logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+            logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"],
+                                preferred_element_type=jnp.float32)
         return shard(logits, "batch", None, "vocab")
 
     def loss(self, params, batch):

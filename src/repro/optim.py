@@ -68,7 +68,11 @@ def apply(cfg: AdamWConfig, params, grads, state: OptState):
     gnorm = global_norm(grads)
     scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
     step = state.step + 1
-    lr = lr_schedule(cfg, step)
+    # the schedule is 0-based (lr_schedule(0) == 0: warmup ramps from
+    # zero), so it is evaluated at the count of *completed* steps; the
+    # first update then only seeds the Adam moments instead of taking a
+    # half-peak sign-descent step off one batch's gradient
+    lr = lr_schedule(cfg, state.step)
     b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
     b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
 

@@ -1,0 +1,67 @@
+"""Thin, named wrappers over the collective primitives used in the repro.
+
+Model/runtime code calls these instead of ``jax.lax.*`` directly so that
+
+- every collective call site names the same vocabulary the analytic
+  bandwidth model uses (``repro.parallel.transport`` classifies the axis),
+- a JAX rename (as happened to ``shard_map`` / ``axis_size``) or a second
+  backend means touching this module, not six call sites.
+
+All of these are valid only inside a :func:`repro.parallel.shard_map`
+body (they act on *manual* mesh axes).
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple, Union
+
+import jax
+
+from repro.parallel.compat import static_axis_size
+
+AxisName = Union[str, Tuple[str, ...], Sequence[str]]
+
+__all__ = ["psum", "pmean", "pmax", "ppermute", "all_gather",
+           "psum_scatter", "axis_index", "axis_size"]
+
+
+def psum(x, axes: AxisName):
+    """Sum-reduce over one or more manual mesh axes."""
+    return jax.lax.psum(x, axes)
+
+
+def pmean(x, axes: AxisName):
+    """Mean-reduce over one or more manual mesh axes."""
+    return jax.lax.pmean(x, axes)
+
+
+def pmax(x, axes: AxisName):
+    """Max-reduce over one or more manual mesh axes."""
+    return jax.lax.pmax(x, axes)
+
+
+def ppermute(x, axis: str, perm):
+    """Point-to-point shift along ``axis``; ``perm`` is (src, dst) pairs.
+    Missing destinations receive zeros (the GPipe bubble semantics)."""
+    return jax.lax.ppermute(x, axis, perm)
+
+
+def all_gather(x, axis: str, *, tiled: bool = False, gather_axis: int = 0):
+    """Gather per-shard values along a new (or tiled) leading dimension."""
+    return jax.lax.all_gather(x, axis, axis=gather_axis, tiled=tiled)
+
+
+def psum_scatter(x, axis: str, *, scatter_dimension: int = 0,
+                 tiled: bool = False):
+    """Reduce-scatter: sum over ``axis``, each shard keeps its slice."""
+    return jax.lax.psum_scatter(x, axis, scatter_dimension=scatter_dimension,
+                                tiled=tiled)
+
+
+def axis_index(axis: str):
+    """This shard's coordinate along a manual mesh axis."""
+    return jax.lax.axis_index(axis)
+
+
+def axis_size(axis: str) -> int:
+    """Static size of a manual mesh axis (version-portable)."""
+    return static_axis_size(axis)

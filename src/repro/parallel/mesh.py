@@ -1,0 +1,51 @@
+"""Mesh construction and axis bookkeeping helpers.
+
+Pure-jax layer under ``repro.sharding`` / ``repro.launch.mesh``: nothing
+here imports model or scheduler code, so SPMD plumbing has no cyclic
+dependencies and JAX-version quirks stay in one place.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+Axes = Union[None, str, Tuple[str, ...]]
+
+
+def axis_tuple(axes: Axes) -> Tuple[str, ...]:
+    """Normalize a logical-rule value (None | str | tuple) to a tuple."""
+    if axes is None:
+        return ()
+    return (axes,) if isinstance(axes, str) else tuple(axes)
+
+
+def axes_size(mesh: Optional[Mesh], axes: Axes) -> int:
+    """Product of mesh extents over ``axes`` (1 for None / no mesh)."""
+    if mesh is None or axes is None:
+        return 1
+    n = 1
+    for a in axis_tuple(axes):
+        n *= mesh.shape[a]
+    return n
+
+
+def make_device_mesh(shape: Sequence[int],
+                     axis_names: Sequence[str],
+                     *, devices=None) -> Mesh:
+    """``jax.make_mesh`` where available, manual reshape otherwise."""
+    mk = getattr(jax, "make_mesh", None)
+    if devices is None and mk is not None:
+        return mk(tuple(shape), tuple(axis_names))
+    devs = np.asarray(devices if devices is not None else jax.devices())
+    return Mesh(devs.reshape(tuple(shape)), tuple(axis_names))
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """The repro's production topology: (16,16) or (2,16,16) with 'pod'
+    outermost — the slow-transport axis per ``repro.parallel.transport``."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return make_device_mesh(shape, axes)

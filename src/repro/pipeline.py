@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import parallel as PX
+
 
 def gpipe_forward(layer_fn: Callable, stage_params, x_micro, *,
                   mesh: Mesh, stage_axis: str = "stage"):
@@ -31,7 +33,7 @@ def gpipe_forward(layer_fn: Callable, stage_params, x_micro, *,
     perm_fwd = [(i, i + 1) for i in range(n_stages - 1)]
 
     def body(params_stage, x_micro):
-        sid = jax.lax.axis_index(stage_axis)
+        sid = PX.axis_index(stage_axis)
         mb_shape = x_micro.shape[1:]
         buf = jnp.zeros(mb_shape, x_micro.dtype)       # stage input reg
         outs = jnp.zeros_like(x_micro)
@@ -55,17 +57,17 @@ def gpipe_forward(layer_fn: Callable, stage_params, x_micro, *,
                     outs, y.astype(outs.dtype), idx, axis=0),
                 outs)
             # hand off activations to the next stage
-            buf_next = jax.lax.ppermute(y, stage_axis, perm_fwd)
+            buf_next = PX.ppermute(y, stage_axis, perm_fwd)
             return (buf_next, outs), None
 
         (_, outs), _ = jax.lax.scan(tick, (buf, outs), jnp.arange(ticks))
         # only the last stage holds real outputs; broadcast them
-        outs = jax.lax.psum(
+        outs = PX.psum(
             jnp.where(sid == n_stages - 1, outs, jnp.zeros_like(outs)),
             stage_axis)
         return outs
 
-    return jax.shard_map(
+    return PX.shard_map(
         body, mesh=mesh,
         in_specs=(P(stage_axis), P()),
         out_specs=P(),

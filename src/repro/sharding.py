@@ -19,6 +19,10 @@ from typing import Dict, Optional, Tuple, Union
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.parallel import axes_size as _axes_size
+from repro.parallel import axis_tuple as _axis_tuple
+from repro.parallel import manual_axes as _manual_axes
+
 Axes = Union[None, str, Tuple[str, ...]]
 
 
@@ -57,30 +61,6 @@ def use_rules(rules: Optional[MeshRules]):
         yield rules
     finally:
         _current.reset(tok)
-
-
-def _axes_size(mesh: Optional[Mesh], axes: Axes) -> int:
-    if mesh is None or axes is None:
-        return 1
-    names = (axes,) if isinstance(axes, str) else axes
-    n = 1
-    for a in names:
-        n *= mesh.shape[a]
-    return n
-
-
-def _manual_axes() -> frozenset:
-    """Mesh axes that are Manual at the current trace point (i.e. we are
-    inside a shard_map mapping them) — constraints must not mention them."""
-    try:
-        am = jax.sharding.get_abstract_mesh()
-        if am is None or am.empty:
-            return frozenset()
-        from jax.sharding import AxisType
-        return frozenset(n for n in am.axis_names
-                         if am._name_to_type[n] == AxisType.Manual)
-    except Exception:              # pragma: no cover - API drift guard
-        return frozenset()
 
 
 def shard(x, *logical: Optional[str]):
@@ -133,20 +113,14 @@ def batch_axes(rules: Optional[MeshRules] = None) -> Tuple[str, ...]:
     rules = rules or _current.get()
     if rules is None:
         return ()
-    ax = rules.rules.get("batch")
-    if ax is None:
-        return ()
-    return (ax,) if isinstance(ax, str) else tuple(ax)
+    return _axis_tuple(rules.rules.get("batch"))
 
 
 def model_axes(rules: Optional[MeshRules] = None) -> Tuple[str, ...]:
     rules = rules or _current.get()
     if rules is None:
         return ()
-    ax = rules.rules.get("expert")
-    if ax is None:
-        return ()
-    return (ax,) if isinstance(ax, str) else tuple(ax)
+    return _axis_tuple(rules.rules.get("expert"))
 
 
 # ---------------------------------------------------------------------------

@@ -26,6 +26,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import checkpoint as ckpt_lib
 from repro import optim
+from repro import parallel as PX
 from repro.collectives.compression import compressed_psum_mean
 from repro.data import DataConfig, Prefetcher, SyntheticCorpus
 from repro.elastic import HeartbeatMonitor, StragglerDetector
@@ -39,17 +40,37 @@ def _split_micro(batch: Dict[str, jax.Array], accum: int):
 
 
 def make_loss_and_grad(model, *, accum: int):
-    """Pod-local accumulated (loss, grads) over ``accum`` microbatches."""
+    """Pod-local accumulated (loss, grads) over ``accum`` microbatches.
+
+    Differentiates wrt an f32 view of the params (cast back to their
+    storage dtype inside the loss, so the forward math is unchanged):
+    grads then materialize and combine in f32 end-to-end.  Differentiating
+    wrt the bf16 leaves directly rounds each microbatch's gradient — e.g.
+    the tied embedding's lookup-scatter + logits-matmul contributions — to
+    bf16 before accumulation, which breaks accum-invariance.
+
+    Cost: the f32 view is a transient 2x-param-bytes buffer live during
+    the accumulation scan (it dies before the optimizer update, which
+    holds its own f32 masters).  Threading the optimizer's masters in
+    here instead would drop that copy; left for a later PR since it
+    changes this function's (params, batch) interface.
+    """
 
     def fn(params, batch):
         micro = _split_micro(batch, accum)
+        dtypes = jax.tree.map(lambda p: p.dtype, params)
+        params32 = jax.tree.map(
+            lambda p: p.astype(jnp.float32), params)
+
+        def cast_loss(p32, mb):
+            p = jax.tree.map(lambda q, dt: q.astype(dt), p32, dtypes)
+            return model.loss(p, mb)
 
         def step(carry, mb):
             loss_sum, grads = carry
             (loss, _metrics), g = jax.value_and_grad(
-                model.loss, has_aux=True)(params, mb)
-            grads = jax.tree.map(
-                lambda a, b: a + b.astype(jnp.float32), grads, g)
+                cast_loss, has_aux=True)(params32, mb)
+            grads = jax.tree.map(lambda a, b: a + b, grads, g)
             return (loss_sum + loss, grads), None
 
         zero_g = jax.tree.map(
@@ -84,14 +105,14 @@ def make_train_step(model, ocfg: optim.AdamWConfig, *, accum: int = 1,
                 grads = jax.tree.map(
                     lambda g: compressed_psum_mean(g, "pod", bits=8),
                     grads)
-                return jax.lax.psum(loss, "pod") / n_pods, grads
+                return PX.psum(loss, "pod") / n_pods, grads
 
             # an explicit leading pod dim keeps the manual 'pod' axis off
             # dims that are auto-sharded over 'data'
             batch_p = {k: v.reshape((n_pods, v.shape[0] // n_pods)
                                     + v.shape[1:])
                        for k, v in batch.items()}
-            loss, grads = jax.shard_map(
+            loss, grads = PX.shard_map(
                 per_pod, mesh=mesh,
                 in_specs=(jax.tree.map(lambda _: P(), params),
                           jax.tree.map(lambda _: P("pod"), batch_p)),

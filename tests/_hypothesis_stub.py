@@ -1,0 +1,140 @@
+"""Deterministic fallback for ``hypothesis`` in no-network environments.
+
+The property tests in this suite use a small slice of the hypothesis API:
+``@settings(max_examples=N, deadline=None)``, ``@given(kw=st...)`` and the
+``floats`` / ``integers`` / ``sampled_from`` strategies.  When the real
+package is unavailable, this shim runs each property as a deterministic
+example-based test: every strategy draws from a seeded PRNG keyed on the
+test name, the example index and the argument name, so all modules always
+collect and the drawn examples are stable across runs.
+
+This is NOT a property-testing engine (no shrinking, no coverage-guided
+generation); install ``hypothesis`` (the ``test`` extra in pyproject.toml)
+for the real thing.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import math
+import random
+import zlib
+from typing import Any, Callable, Dict, Sequence
+
+DEFAULT_MAX_EXAMPLES = 10
+_SETTINGS_ATTR = "_stub_max_examples"
+
+
+class SearchStrategy:
+    """A deterministic value source: draw(rng) -> value."""
+
+    def __init__(self, draw: Callable[[random.Random], Any], label: str):
+        self._draw = draw
+        self.label = label
+
+    def draw(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+    def __repr__(self):
+        return f"SearchStrategy({self.label})"
+
+
+class strategies:
+    """Stand-in for ``hypothesis.strategies`` (used as ``st``)."""
+
+    @staticmethod
+    def floats(min_value: float, max_value: float, **_: Any
+               ) -> SearchStrategy:
+        lo, hi = float(min_value), float(max_value)
+
+        def draw(rng: random.Random) -> float:
+            if lo > 0 and hi / lo > 1e3:      # wide positive range: log scale
+                return math.exp(rng.uniform(math.log(lo), math.log(hi)))
+            return rng.uniform(lo, hi)
+        return SearchStrategy(draw, f"floats({lo}, {hi})")
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> SearchStrategy:
+        return SearchStrategy(
+            lambda rng: rng.randint(int(min_value), int(max_value)),
+            f"integers({min_value}, {max_value})")
+
+    @staticmethod
+    def sampled_from(elements: Sequence[Any]) -> SearchStrategy:
+        elems = list(elements)
+        return SearchStrategy(lambda rng: elems[rng.randrange(len(elems))],
+                              f"sampled_from({elems!r})")
+
+    @staticmethod
+    def booleans() -> SearchStrategy:
+        return SearchStrategy(lambda rng: bool(rng.randrange(2)),
+                              "booleans()")
+
+
+st = strategies
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, **_: Any):
+    """Decorator recording how many deterministic examples to run.
+
+    Unknown keywords (deadline=..., suppress_health_check=...) are
+    accepted and ignored — they configure engine behavior the stub
+    doesn't have.
+    """
+    def deco(fn):
+        setattr(fn, _SETTINGS_ATTR, max_examples)
+        return fn
+    return deco
+
+
+def given(**param_strategies: SearchStrategy):
+    """Run the test once per deterministic example.
+
+    Examples are seeded from (test name, example index, parameter name),
+    so runs are reproducible and order-independent.
+    """
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, _SETTINGS_ATTR,
+                        getattr(fn, _SETTINGS_ATTR, DEFAULT_MAX_EXAMPLES))
+            base = zlib.crc32(fn.__qualname__.encode())
+            for i in range(n):
+                drawn: Dict[str, Any] = {}
+                for name, strat in param_strategies.items():
+                    seed = zlib.crc32(name.encode()) ^ (base + i)
+                    drawn[name] = strat.draw(random.Random(seed))
+                try:
+                    fn(*args, **{**drawn, **kwargs})
+                except _AssumptionNotMet:
+                    continue
+                except Exception as e:
+                    raise AssertionError(
+                        f"stub-hypothesis example {i}/{n} failed with "
+                        f"{drawn!r}: {e}") from e
+
+        # pytest must not mistake the strategy-supplied parameters for
+        # fixtures: expose only the remaining (fixture) parameters and
+        # drop functools' __wrapped__ so introspection stops here
+        sig = inspect.signature(fn)
+        remaining = [p for name, p in sig.parameters.items()
+                     if name not in param_strategies]
+        wrapper.__signature__ = sig.replace(parameters=remaining)
+        del wrapper.__wrapped__
+        return wrapper
+    return deco
+
+
+class HealthCheck:
+    """Placeholder namespace so ``suppress_health_check=[...]`` parses."""
+    too_slow = data_too_large = filter_too_much = None
+
+
+def assume(condition: bool) -> None:
+    """Weak stand-in: examples violating an assumption just pass."""
+    if not condition:
+        raise _AssumptionNotMet()
+
+
+class _AssumptionNotMet(Exception):
+    pass

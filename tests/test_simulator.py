@@ -1,7 +1,10 @@
 """Simulator invariants + paper-claim checks, incl. hypothesis properties."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # no-network env: deterministic example-based shim
+    from tests._hypothesis_stub import given, settings, st
 
 from repro.core.job import Job
 from repro.core.metrics import ModeComparison
