@@ -1,10 +1,13 @@
 """Kernel microbenchmarks (interpret mode on CPU: correctness-path timing;
-the derived column reports kernel-vs-jnp-ref output agreement)."""
+the derived column reports kernel-vs-jnp-ref output agreement).
+
+One table-driven loop; the warmup call's output is reused for the error
+column instead of recomputing each jitted kernel a second time.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import emit, time_fn
 from repro.kernels.flash_attention.ops import flash_attention
@@ -17,19 +20,14 @@ from repro.kernels.rmsnorm.ops import rmsnorm
 from repro.kernels.rmsnorm.ref import rmsnorm_ref
 
 
-def main() -> None:
+def _cases():
     ks = jax.random.split(jax.random.key(0), 5)
+    B = 1
 
-    B, S, H, Kv, D = 1, 256, 4, 2, 64
+    S, H, Kv, D = 256, 4, 2, 64
     q = jax.random.normal(ks[0], (B, S, H, D))
     k = jax.random.normal(ks[1], (B, S, Kv, D))
     v = jax.random.normal(ks[2], (B, S, Kv, D))
-    f = jax.jit(lambda q, k, v: flash_attention(
-        q, k, v, causal=True, block_q=64, block_k=64))
-    us = time_fn(lambda: jax.block_until_ready(f(q, k, v)))
-    err = float(jnp.max(jnp.abs(
-        f(q, k, v) - attention_ref(q, k, v, causal=True))))
-    emit("kernel_flash_attention", us, f"max_err_vs_ref={err:.2e}")
 
     T, Hh, P, G, N = 256, 2, 32, 1, 16
     x = jax.random.normal(ks[0], (B, T, Hh, P))
@@ -37,11 +35,6 @@ def main() -> None:
     A = -jnp.exp(jax.random.normal(ks[2], (Hh,)) * 0.5)
     Bm = jax.random.normal(ks[3], (B, T, G, N))
     Cm = jax.random.normal(ks[4], (B, T, G, N))
-    g = jax.jit(lambda *a: ssd(*a, chunk=64))
-    us = time_fn(lambda: jax.block_until_ready(g(x, dt, A, Bm, Cm)[0]))
-    err = float(jnp.max(jnp.abs(
-        g(x, dt, A, Bm, Cm)[0] - ssd_ref(x, dt, A, Bm, Cm)[0])))
-    emit("kernel_mamba_scan", us, f"max_err_vs_ref={err:.2e}")
 
     Dm = 32
     qm = jax.random.normal(ks[0], (B, T, Hh, Dm))
@@ -49,20 +42,37 @@ def main() -> None:
     vm = jax.random.normal(ks[2], (B, T, Hh, Dm))
     ir = jax.random.normal(ks[3], (B, T, Hh)) * 2
     fr = jax.random.normal(ks[4], (B, T, Hh)) * 2 + 3
-    h = jax.jit(lambda *a: mlstm(*a, chunk=64))
-    us = time_fn(lambda: jax.block_until_ready(
-        h(qm, km, vm, ir, fr)[0]))
-    err = float(jnp.max(jnp.abs(
-        h(qm, km, vm, ir, fr)[0] - mlstm_ref(qm, km, vm, ir, fr)[0])))
-    emit("kernel_mlstm", us, f"max_err_vs_ref={err:.2e}")
 
     xr = jax.random.normal(ks[0], (512, 768), jnp.bfloat16)
     wr = jnp.ones((768,), jnp.float32)
-    r = jax.jit(rmsnorm)
-    us = time_fn(lambda: jax.block_until_ready(r(xr, wr)))
-    err = float(jnp.max(jnp.abs(
-        (r(xr, wr) - rmsnorm_ref(xr, wr)).astype(jnp.float32))))
-    emit("kernel_rmsnorm", us, f"max_err_vs_ref={err:.2e}")
+
+    # (name, jitted fn, args, ref fn, pick-primary-output)
+    first = lambda o: o[0]
+    ident = lambda o: o
+    return [
+        ("kernel_flash_attention",
+         jax.jit(lambda q, k, v: flash_attention(
+             q, k, v, causal=True, block_q=64, block_k=64)),
+         (q, k, v),
+         lambda q, k, v: attention_ref(q, k, v, causal=True), ident),
+        ("kernel_mamba_scan",
+         jax.jit(lambda *a: ssd(*a, chunk=64)),
+         (x, dt, A, Bm, Cm), ssd_ref, first),
+        ("kernel_mlstm",
+         jax.jit(lambda *a: mlstm(*a, chunk=64)),
+         (qm, km, vm, ir, fr), mlstm_ref, first),
+        ("kernel_rmsnorm", jax.jit(rmsnorm), (xr, wr), rmsnorm_ref, ident),
+    ]
+
+
+def main() -> None:
+    for name, fn, args, ref_fn, pick in _cases():
+        out = jax.block_until_ready(fn(*args))     # compile + warmup
+        us = time_fn(lambda: jax.block_until_ready(fn(*args)), warmup=0)
+        ref = pick(ref_fn(*args))
+        err = float(jnp.max(jnp.abs(
+            (pick(out) - ref).astype(jnp.float32))))
+        emit(name, us, f"max_err_vs_ref={err:.2e}")
 
 
 if __name__ == "__main__":

@@ -11,7 +11,8 @@ import traceback
 from benchmarks import (drain_costs, fig6_parity, fig7_train_fifo,
                         fig8_mixed_backfill, fig9_placement,
                         fig10_transport, fig11_allreduce_bw,
-                        kernel_bench, roofline, table1_workloads)
+                        grad_sync_bench, kernel_bench, roofline,
+                        table1_workloads)
 
 MODULES = [
     ("table1_workloads", table1_workloads),
@@ -22,6 +23,7 @@ MODULES = [
     ("fig9_placement", fig9_placement),
     ("fig10_transport", fig10_transport),
     ("fig11_allreduce_bw", fig11_allreduce_bw),
+    ("grad_sync_bench", grad_sync_bench),
     ("kernel_bench", kernel_bench),
     ("roofline", roofline),
 ]

@@ -242,6 +242,7 @@ class HloStats:
     collective_bytes: float = 0.0          # ring-model traffic
     collective_operand_bytes: float = 0.0  # spec-literal operand sum
     cross_pod_bytes: float = 0.0           # traffic crossing the pod cut
+    cross_pod_operand_bytes: float = 0.0   # payload bytes handed to those ops
     collective_ops: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     def add(self, other: "HloStats", mult: float = 1.0):
@@ -251,6 +252,7 @@ class HloStats:
         self.collective_operand_bytes += \
             other.collective_operand_bytes * mult
         self.cross_pod_bytes += other.cross_pod_bytes * mult
+        self.cross_pod_operand_bytes += other.cross_pod_operand_bytes * mult
         for k, v in other.collective_ops.items():
             self.collective_ops[k] = (self.collective_ops.get(k, 0)
                                       + int(v * mult))
@@ -301,17 +303,22 @@ def analyze(text: str, *, chips_per_pod: Optional[int] = None) -> HloStats:
                                     collective_bytes=sub.collective_bytes,
                                     collective_operand_bytes=(
                                         sub.collective_operand_bytes),
+                                    cross_pod_bytes=sub.cross_pod_bytes,
+                                    cross_pod_operand_bytes=(
+                                        sub.cross_pod_operand_bytes),
                                     collective_ops=sub.collective_ops)
                     st.add(only)
             if oc in ("dot", "convolution"):
                 st.dot_flops += _dot_flops(op, types)
             if any(oc.startswith(k) for k in _COLLECTIVES):
                 traffic = _collective_traffic(op, types)
+                operand = sum(type_bytes(types.get(o, ""))
+                              for o in op.operands)
                 st.collective_bytes += traffic
-                st.collective_operand_bytes += sum(
-                    type_bytes(types.get(o, "")) for o in op.operands)
+                st.collective_operand_bytes += operand
                 if chips_per_pod and _crosses_pod(op, chips_per_pod):
                     st.cross_pod_bytes += traffic
+                    st.cross_pod_operand_bytes += operand
                 k = oc.replace("-start", "")
                 st.collective_ops[k] = st.collective_ops.get(k, 0) + 1
             if oc not in _FREE_OPS and not oc.endswith("-done"):

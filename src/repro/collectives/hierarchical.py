@@ -31,27 +31,23 @@ from repro.collectives.compression import compressed_psum_mean
 from repro.parallel.transport import is_slow_axis
 
 
-def _flat_psum_scatter(x, axis):
-    """reduce-scatter along leading dim over ``axis`` (pads if needed)."""
-    n = PX.axis_size(axis)
-    flat = x.reshape(-1)
-    pad = (-flat.shape[0]) % n
-    if pad:
-        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
-    return PX.psum_scatter(flat.reshape(n, -1), axis,
-                           scatter_dimension=0, tiled=False), pad
+def hier_reduce_mean_shard(flat, *, fast_axis: Optional[str],
+                           slow_axis: Optional[str],
+                           compress_bits: int = 0):
+    """Fast-axis reduce-scatter + slow-axis mean of a flat f32 buffer.
 
+    The shard-level half of the hierarchical schedule: each rank is left
+    holding the *globally meaned* 1/F contiguous slice of ``flat``
+    (replicated across the slow axis), which is exactly what a
+    shard-resident (ZeRO-1) optimizer consumes — the bucketed train paths
+    stop here and only all-gather updated params.
 
-def hier_all_reduce_mean(x, *, fast_axis: str, slow_axis: Optional[str],
-                         compress_bits: int = 0):
-    """Hierarchical mean all-reduce inside a shard_map body.
-
-    fast_axis: intra-pod axis (ICI / 'SHM'); slow_axis: cross-pod ('NET').
-    compress_bits: 0 (full precision) | 16 (bf16) | 8 (int8+scale) for the
-    slow hop only.
+    ``flat`` must be 1-D with length divisible by the fast-axis size.
+    Either axis may be ``None`` (single-tier / single-device meshes), in
+    which case that hop is skipped.
     """
-    nf = PX.axis_size(fast_axis)
-    shard, pad = _flat_psum_scatter(x, fast_axis)      # fast reduce-scatter
+    nf = PX.axis_size(fast_axis) if fast_axis is not None else 1
+    shard = PX.reduce_scatter_flat(flat, fast_axis) if nf > 1 else flat
     if slow_axis is not None:
         if compress_bits:
             shard = compressed_psum_mean(shard, slow_axis,
@@ -59,12 +55,30 @@ def hier_all_reduce_mean(x, *, fast_axis: str, slow_axis: Optional[str],
         else:
             ns = PX.axis_size(slow_axis)
             shard = PX.psum(shard, slow_axis) / ns
-    full = PX.all_gather(shard, fast_axis, gather_axis=0,
-                         tiled=False)                  # fast all-gather
-    flat = full.reshape(-1)
+    return shard / nf
+
+
+def hier_all_reduce_mean(x, *, fast_axis: Optional[str],
+                         slow_axis: Optional[str], compress_bits: int = 0):
+    """Hierarchical mean all-reduce inside a shard_map body.
+
+    fast_axis: intra-pod axis (ICI / 'SHM'); slow_axis: cross-pod ('NET').
+    compress_bits: 0 (full precision) | 16 (bf16) | 8 (int8+scale) for the
+    slow hop only.  Pads the flattened tensor so the fast axis divides it.
+    """
+    nf = PX.axis_size(fast_axis) if fast_axis is not None else 1
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % nf
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    shard = hier_reduce_mean_shard(flat, fast_axis=fast_axis,
+                                   slow_axis=slow_axis,
+                                   compress_bits=compress_bits)
+    flat = (PX.all_gather_flat(shard, fast_axis)        # fast all-gather
+            if nf > 1 else shard)
     if pad:
         flat = flat[:-pad]
-    return (flat / nf).reshape(x.shape)
+    return flat.reshape(x.shape)
 
 
 def flat_all_reduce_mean(x, *, axes: Tuple[str, ...]):

@@ -48,6 +48,7 @@ class _Running:
     job: Job
     placement: Placement
     finish_version: int = 0
+    finish_at: float = 0.0        # absolute time of the live finish event
 
 
 class Simulation:
@@ -120,6 +121,11 @@ class Simulation:
         placed_any = True
         while placed_any:
             placed_any = False
+            # the cluster is immutable until a candidate places, which
+            # restarts the while-loop — so the idle-slice sum is computed
+            # at most once per round instead of per blocked candidate
+            # (quadratic on large traces otherwise)
+            idle_slices: Optional[int] = None
             for job in list(self.scheduler.candidates(self.queue)):
                 res = self.mode.try_place(job, self.cluster)
                 if isinstance(res, Placement):
@@ -134,19 +140,23 @@ class Simulation:
                     self._start_reconfig(res)
                     placed_any = True
                     break
-                self._note_frag(job)
+                if idle_slices is None:
+                    idle_slices = self._idle_slice_sum()
+                self._note_frag(job, idle_slices)
                 if self.scheduler.policy == "fifo":
                     break
 
-    def _note_frag(self, job: Job) -> None:
+    def _idle_slice_sum(self) -> int:
+        idle = sum(PROFILES[i.profile].sm_slices
+                   for i in self.cluster.idle_instances())
+        if self.mode.name == "DM":
+            idle += sum(
+                g.free_compute_slices() for g in self.cluster.all_gpus())
+        return idle
+
+    def _note_frag(self, job: Job, idle_slices: int) -> None:
         """External-fragmentation bookkeeping: enough idle capacity in
         total, but no placement (I2)."""
-        idle_slices = sum(
-            PROFILES[i.profile].sm_slices
-            for i in self.cluster.idle_instances())
-        if self.mode.name == "DM":
-            idle_slices += sum(
-                g.free_compute_slices() for g in self.cluster.all_gpus())
         blocked_with_capacity = idle_slices >= job.size
         if blocked_with_capacity and job.job_id not in self.frag_since:
             self.frag_since[job.job_id] = self.now
@@ -186,11 +196,11 @@ class Simulation:
         if self._first_start is None:
             self._first_start = self.now
         dur = self._jct(job, placement)
-        rec = _Running(job, placement)
+        rec = _Running(job, placement, finish_at=self.now + dur)
         self.running[job.job_id] = rec
         self._busy_slices += sum(PROFILES[i.profile].sm_slices
                                  for i in placement.instances)
-        self._push(self.now + dur, "finish", (job.job_id, 0))
+        self._push(rec.finish_at, "finish", (job.job_id, 0))
 
     def _finish(self, rec: _Running) -> None:
         job = rec.job
@@ -216,17 +226,19 @@ class Simulation:
             remaining = self._remaining_until_finish(rec)
             rec.finish_version += 1
             rec.job.suspended_overhead += plan.duration
-            self._push(self.now + remaining + plan.duration, "finish",
+            rec.finish_at = self.now + remaining + plan.duration
+            self._push(rec.finish_at, "finish",
                        (job_id, rec.finish_version))
         self._push(self.now + plan.duration, "reconfig_done", plan)
 
     def _remaining_until_finish(self, rec: _Running) -> float:
-        """Time left on the currently-live finish event of ``rec``."""
-        for t, _, kind, payload in self.events:
-            if kind == "finish" and payload[0] == rec.job.job_id \
-                    and payload[1] == rec.finish_version:
-                return max(0.0, t - self.now)
-        return 0.0
+        """Time left on the currently-live finish event of ``rec``.
+
+        O(1): ``finish_at`` mirrors the live (version-matching) finish
+        event — stale events from earlier drains are superseded, never
+        removed, so scanning the heap for it was O(events) per drained
+        job."""
+        return max(0.0, rec.finish_at - self.now)
 
     def _reconfig_done(self, plan: ReconfigPlan) -> None:
         gpu = self.cluster.gpus[(plan.host_id, plan.gpu_id)]

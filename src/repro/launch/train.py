@@ -31,6 +31,13 @@ def main():
     ap.add_argument("--data-parallel", type=int, default=0,
                     help="devices for a (dp, mp) mesh; 0 = single device")
     ap.add_argument("--model-parallel", type=int, default=1)
+    from repro.train import CROSS_POD_MODES
+    ap.add_argument("--cross-pod-mode", default="xla",
+                    choices=CROSS_POD_MODES,
+                    help="gradient sync schedule (bucketed modes need a "
+                         "pure data-parallel mesh)")
+    ap.add_argument("--bucket-mb", type=int, default=32,
+                    help="bucket capacity for the hier_bucketed* modes")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -42,7 +49,11 @@ def main():
     if args.data_parallel:
         mesh = jax.make_mesh((args.data_parallel, args.model_parallel),
                              ("data", "model"))
-        rules = make_rules(mesh)
+        # manual sync modes keep params replicated (train._check_manual_
+        # sync_rules rejects FSDP rules), so build ZeRO-1-style rules
+        from repro.train import MANUAL_SYNC_MODES
+        rules = make_rules(
+            mesh, fsdp=args.cross_pod_mode not in MANUAL_SYNC_MODES)
 
     trainer = Trainer(
         model,
@@ -50,7 +61,9 @@ def main():
                           total_steps=args.steps),
         TrainerConfig(n_steps=args.steps, ckpt_every=50,
                       ckpt_dir=args.ckpt_dir, log_every=10,
-                      accum=args.accum),
+                      accum=args.accum,
+                      cross_pod_mode=args.cross_pod_mode,
+                      bucket_bytes=args.bucket_mb << 20),
         DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
                    global_batch=args.batch),
         rules=rules)

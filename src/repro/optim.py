@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Dict, NamedTuple, Optional
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -19,6 +19,22 @@ class OptState(NamedTuple):
     mu: Any
     nu: Any
     master: Any                    # f32 master weights (None if disabled)
+
+
+class BucketedOptState(NamedTuple):
+    """ZeRO-1-style optimizer state over flat f32 buckets.
+
+    ``mu``/``nu``/``master`` are tuples of 1-D f32 arrays, one per bucket
+    of a :class:`repro.collectives.bucketing.BucketLayout`.  On a mesh
+    they are sharded over the fast (data) axis — each rank holds only its
+    contiguous 1/F shard of every bucket — and the train step's
+    ``hier_bucketed_zero1`` path updates them shard-resident.
+    """
+
+    step: jax.Array
+    mu: Any                        # Tuple[jax.Array, ...]
+    nu: Any
+    master: Any                    # f32 masters (always present)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,16 +73,66 @@ def init(cfg: AdamWConfig, params) -> OptState:
                     nu=jax.tree.map(jnp.copy, zeros), master=master)
 
 
+def init_bucketed(cfg: AdamWConfig, params, layout) -> BucketedOptState:
+    """Bucketed (flat f32) state for the shard-resident optimizer mode.
+
+    Returns *full* (unsharded) buckets; callers on a mesh device_put them
+    with a fast-axis sharding (``PartitionSpec(fast_axis)``) so each rank
+    materializes only its shard.  Masters are mandatory in this mode —
+    they are the source of truth the params are re-gathered from.
+    """
+    from repro.collectives.bucketing import flatten_to_buckets
+    assert cfg.use_master, "bucketed ZeRO-1 state requires f32 masters"
+    master = flatten_to_buckets(layout, params)
+    return BucketedOptState(
+        step=jnp.zeros((), jnp.int32),
+        mu=tuple(jnp.zeros_like(b) for b in master),
+        nu=tuple(jnp.zeros_like(b) for b in master),
+        master=master)
+
+
 def global_norm(tree) -> jax.Array:
     leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
               for g in jax.tree.leaves(tree)]
     return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
 
 
-def apply(cfg: AdamWConfig, params, grads, state: OptState):
-    """One AdamW step.  Returns (new_params, new_state, metrics)."""
-    gnorm = global_norm(grads)
-    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+def _clip_scale(cfg: AdamWConfig, gnorm):
+    return jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+
+
+def _adamw_update(cfg: AdamWConfig, g, m, v, base, *, lr, b1c, b2c,
+                  scale):
+    """One elementwise AdamW update -> (m, v, new_w).
+
+    The single source of the update math: ``apply`` (param tree) and
+    ``apply_flat`` (flat bucket shards) both call this, which is what
+    makes their bitwise parity — the ``hier_bucketed`` vs
+    ``hier_bucketed_zero1`` guarantee — structural rather than a
+    copy-paste invariant.
+    """
+    g = g.astype(jnp.float32) * scale
+    m = cfg.b1 * m + (1 - cfg.b1) * g
+    v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+    mh = m / b1c
+    vh = v / b2c
+    new_w = base - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                         + cfg.weight_decay * base)
+    return m, v, new_w
+
+
+def apply(cfg: AdamWConfig, params, grads, state: OptState, *,
+          gnorm=None):
+    """One AdamW step.  Returns (new_params, new_state, metrics).
+
+    ``gnorm`` lets callers that already hold a reduced view of the
+    gradients (e.g. the bucketed hierarchical paths, which compute the
+    norm from reduce-scattered shards) supply the clipping norm instead
+    of re-deriving it from the full tree.
+    """
+    if gnorm is None:
+        gnorm = global_norm(grads)
+    scale = _clip_scale(cfg, gnorm)
     step = state.step + 1
     # the schedule is 0-based (lr_schedule(0) == 0: warmup ramps from
     # zero), so it is evaluated at the count of *completed* steps; the
@@ -77,14 +143,9 @@ def apply(cfg: AdamWConfig, params, grads, state: OptState):
     b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
 
     def upd(p, g, m, v, w):
-        g = g.astype(jnp.float32) * scale
-        m = cfg.b1 * m + (1 - cfg.b1) * g
-        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
-        mh = m / b1c
-        vh = v / b2c
         base = w if w is not None else p.astype(jnp.float32)
-        new_w = base - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
-                             + cfg.weight_decay * base)
+        m, v, new_w = _adamw_update(cfg, g, m, v, base, lr=lr, b1c=b1c,
+                                    b2c=b2c, scale=scale)
         return new_w.astype(p.dtype), m, v, new_w
 
     if state.master is not None:
@@ -104,3 +165,37 @@ def apply(cfg: AdamWConfig, params, grads, state: OptState):
                   if state.master is not None else None)
     metrics = {"lr": lr, "grad_norm": gnorm}
     return new_params, OptState(step, new_mu, new_nu, new_master), metrics
+
+
+def apply_flat(cfg: AdamWConfig, grads, state: BucketedOptState, *,
+               gnorm) -> Tuple[BucketedOptState, Dict[str, jax.Array]]:
+    """Shard-resident AdamW over flat f32 bucket (shards).
+
+    ``grads`` is a tuple of flat f32 buffers aligned element-for-element
+    with ``state``'s buckets — on a mesh, each rank's reduce-scattered
+    shard of the globally meaned gradient.  ``gnorm`` must be the *global*
+    norm (see ``bucketing.shard_global_norm``); clipping and the schedule
+    are then identical to :func:`apply`, and because every remaining op is
+    elementwise the update is bitwise-identical to the replicated path.
+
+    Returns (new_state, metrics); params are the caller's to re-gather
+    from ``new_state.master`` (cast to storage dtype on unflatten) — that
+    is the whole point: gradients never travel the fast tier twice.
+    """
+    scale = _clip_scale(cfg, gnorm)
+    step = state.step + 1
+    lr = lr_schedule(cfg, state.step)     # 0-based, as in apply()
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    new_mu, new_nu, new_master = [], [], []
+    for g, m, v, w in zip(grads, state.mu, state.nu, state.master):
+        m, v, new_w = _adamw_update(cfg, g, m, v, w, lr=lr, b1c=b1c,
+                                    b2c=b2c, scale=scale)
+        new_mu.append(m)
+        new_nu.append(v)
+        new_master.append(new_w)
+
+    new_state = BucketedOptState(step, tuple(new_mu), tuple(new_nu),
+                                 tuple(new_master))
+    return new_state, {"lr": lr, "grad_norm": gnorm}

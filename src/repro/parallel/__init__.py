@@ -13,9 +13,10 @@ Every SPMD primitive the repro uses lives behind this package:
 Model and runtime modules import from here; none of them may call the raw
 jax shard_map entry points or re-declare bandwidth constants.
 """
-from repro.parallel.collectives import (all_gather, axis_index, axis_size,
-                                        pmax, pmean, ppermute, psum,
-                                        psum_scatter)
+from repro.parallel.collectives import (all_gather, all_gather_flat,
+                                        axis_index, axis_size, pmax, pmean,
+                                        ppermute, psum, psum_scatter,
+                                        reduce_scatter_flat)
 from repro.parallel.compat import (SHARD_MAP_IMPL, manual_axes, shard_map,
                                    static_axis_size)
 from repro.parallel.mesh import (axes_size, axis_tuple, make_device_mesh,
@@ -28,7 +29,7 @@ __all__ = [
     "SHARD_MAP_IMPL", "shard_map", "manual_axes", "static_axis_size",
     "axes_size", "axis_tuple", "make_device_mesh", "make_production_mesh",
     "psum", "pmean", "pmax", "ppermute", "all_gather", "psum_scatter",
-    "axis_index", "axis_size",
+    "axis_index", "axis_size", "reduce_scatter_flat", "all_gather_flat",
     "TIERS", "AXIS_TIER", "TransportTier", "tier_for_axis", "is_slow_axis",
     "fast_slow_axes",
 ]

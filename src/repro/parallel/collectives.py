@@ -21,7 +21,8 @@ from repro.parallel.compat import static_axis_size
 AxisName = Union[str, Tuple[str, ...], Sequence[str]]
 
 __all__ = ["psum", "pmean", "pmax", "ppermute", "all_gather",
-           "psum_scatter", "axis_index", "axis_size"]
+           "psum_scatter", "axis_index", "axis_size",
+           "reduce_scatter_flat", "all_gather_flat"]
 
 
 def psum(x, axes: AxisName):
@@ -55,6 +56,27 @@ def psum_scatter(x, axis: str, *, scatter_dimension: int = 0,
     """Reduce-scatter: sum over ``axis``, each shard keeps its slice."""
     return jax.lax.psum_scatter(x, axis, scatter_dimension=scatter_dimension,
                                 tiled=tiled)
+
+
+def reduce_scatter_flat(x, axis: str):
+    """Reduce-scatter a flat buffer: sum over ``axis``, rank ``i`` keeps the
+    ``i``-th contiguous 1/n slice.
+
+    ``x`` must be 1-D with length divisible by the axis size (the bucket
+    layouts guarantee this via their ``align``).  Inverse of
+    :func:`all_gather_flat` up to the reduction.
+    """
+    n = static_axis_size(axis)
+    shard = jax.lax.psum_scatter(x.reshape(n, -1), axis,
+                                 scatter_dimension=0, tiled=False)
+    return shard.reshape(-1)
+
+
+def all_gather_flat(shard, axis: str):
+    """Concatenate per-rank flat shards in rank order into one flat buffer
+    (the inverse of :func:`reduce_scatter_flat`'s slicing)."""
+    full = jax.lax.all_gather(shard, axis, axis=0, tiled=False)
+    return full.reshape(-1)
 
 
 def axis_index(axis: str):

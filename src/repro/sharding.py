@@ -93,6 +93,13 @@ def shard(x, *logical: Optional[str]):
             fixed.append(axes if (n > 1 and dim % n == 0) or n == 1
                          else None)
         spec = P(*fixed)
+    if manual and all(ax is None for ax in spec):
+        # every axis is manually mapped by the enclosing shard_map: the
+        # constraint is vacuous per-rank, and an all-None constraint would
+        # demand a mesh context manager at the call site for no effect
+        # (outside shard_map an all-None spec still means "replicate", so
+        # it is only skipped in the manual case)
+        return x
     return jax.lax.with_sharding_constraint(x, spec)
 
 
@@ -121,6 +128,31 @@ def model_axes(rules: Optional[MeshRules] = None) -> Tuple[str, ...]:
     if rules is None:
         return ()
     return _axis_tuple(rules.rules.get("expert"))
+
+
+def grad_sync_axes(mesh: Optional[Mesh]
+                   ) -> Tuple[Optional[str], Optional[str]]:
+    """(fast_axis, slow_axis) for explicit gradient synchronization.
+
+    The manual (shard_map) gradient-sync modes reduce over the
+    data-parallel fast axis and the cross-pod slow axis; a mesh carrying
+    any *other* non-trivial axis (tensor/expert parallelism) cannot keep
+    params replicated inside a fully-manual step, so it is rejected here
+    rather than silently miscomputing.
+    """
+    if mesh is None:
+        return None, None
+    names = tuple(mesh.axis_names)
+    extra = [a for a in names if a not in ("data", "pod")
+             and mesh.shape[a] > 1]
+    if extra:
+        raise ValueError(
+            f"manual gradient-sync modes support (pod, data) meshes only; "
+            f"mesh has non-trivial axes {extra!r} (use cross_pod_mode="
+            f"'xla' for tensor/expert-parallel meshes)")
+    fast = "data" if "data" in names else None
+    slow = "pod" if "pod" in names else None
+    return fast, slow
 
 
 # ---------------------------------------------------------------------------

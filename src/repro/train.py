@@ -5,9 +5,24 @@ opt, metrics) function with:
 - microbatch gradient accumulation (lax.scan) — required to fit the 100B
   archs' activations in 16 GB/chip;
 - per-layer remat (inside the models' scanned stacks);
-- cross-pod gradient modes: 'xla' (SPMD inserts the minimal sharded
-  all-reduce over 'pod') or 'compressed' (explicit shard_map over 'pod'
-  with int8 all-gather — 4x fewer DCN bytes, §Perf).
+- cross-pod gradient sync modes (``cross_pod_mode``):
+
+  * ``'xla'``         SPMD inserts the minimal sharded all-reduce.
+  * ``'compressed'``  explicit shard_map over 'pod', int8 all-gather on
+                      the slow hop only — 4x fewer DCN bytes.
+  * ``'hier'``        fully-manual per-tensor hierarchical schedule
+                      (reduce-scatter fast / psum slow / all-gather
+                      fast) — 3 collectives *per leaf*; kept as the
+                      latency-bound baseline the bucketed modes beat.
+  * ``'hier_bucketed'``        the hierarchical schedule once per flat
+                      f32 *bucket* (``collectives.bucketing``) — a
+                      handful of large collectives per step.
+  * ``'hier_bucketed_zero1'``  bucketed + shard-resident optimizer: the
+                      schedule stops after the slow hop, AdamW updates
+                      each rank's bucket shard (f32 masters sharded over
+                      the fast axis) and updated *params* are
+                      all-gathered instead of gradients.  Bitwise-
+                      identical losses to ``hier_bucketed``.
 
 ``Trainer`` adds checkpoint/restart, heartbeats, straggler detection and
 failure injection around the step function.
@@ -15,6 +30,7 @@ failure injection around the step function.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import os
 import time
 from typing import Any, Callable, Dict, Optional, Tuple
@@ -27,10 +43,15 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro import checkpoint as ckpt_lib
 from repro import optim
 from repro import parallel as PX
+from repro.collectives import bucketing
 from repro.collectives.compression import compressed_psum_mean
+from repro.collectives.hierarchical import hier_all_reduce_mean
 from repro.data import DataConfig, Prefetcher, SyntheticCorpus
 from repro.elastic import HeartbeatMonitor, StragglerDetector
-from repro.sharding import MeshRules, use_rules
+from repro.sharding import MeshRules, grad_sync_axes, use_rules
+
+MANUAL_SYNC_MODES = ("hier", "hier_bucketed", "hier_bucketed_zero1")
+CROSS_POD_MODES = ("xla", "compressed") + MANUAL_SYNC_MODES
 
 
 def _split_micro(batch: Dict[str, jax.Array], accum: int):
@@ -51,9 +72,11 @@ def make_loss_and_grad(model, *, accum: int):
 
     Cost: the f32 view is a transient 2x-param-bytes buffer live during
     the accumulation scan (it dies before the optimizer update, which
-    holds its own f32 masters).  Threading the optimizer's masters in
-    here instead would drop that copy; left for a later PR since it
-    changes this function's (params, batch) interface.
+    holds its own f32 masters).  The bucketed sync modes use
+    ``collectives.bucketing.make_bucket_loss_and_grad`` instead, which
+    differentiates wrt flat f32 buckets (same transient footprint, but
+    no per-leaf f32 tree, flat gradient accumulation, and — in the
+    zero1 mode — 1/F-sharded instead of replicated f32 masters).
     """
 
     def fn(params, batch):
@@ -83,12 +106,180 @@ def make_loss_and_grad(model, *, accum: int):
     return fn
 
 
+def make_bucket_layout(params_or_shapes, mesh=None, *,
+                       bucket_bytes: int = bucketing.DEFAULT_BUCKET_BYTES
+                       ) -> bucketing.BucketLayout:
+    """The bucket layout the bucketed train modes derive for this mesh.
+
+    Alignment is the fast-axis size so reduce-scatter divides every
+    bucket evenly; passing the same (tree, mesh, bucket_bytes) the step
+    sees — concrete params, ``jax.eval_shape`` output, either works —
+    yields the exact layout, which is what ``optim.init_bucketed`` needs.
+    """
+    fast_axis, _ = grad_sync_axes(mesh)
+    align = mesh.shape[fast_axis] if (mesh is not None and fast_axis) else 1
+    return bucketing.plan_buckets(params_or_shapes,
+                                  bucket_bytes=bucket_bytes, align=align)
+
+
+# logical axes that shard *parameters* (vs batch/sequence activations) —
+# the manual sync modes keep params replicated, so rules mapping any of
+# these onto a real mesh axis would be silently ignored; reject instead
+_PARAM_LOGICAL_AXES = ("embed", "heads", "kv_heads", "ff", "vocab",
+                       "expert", "state", "conv", "norm", "lora")
+
+
+def _check_manual_sync_rules(rules: Optional[MeshRules]) -> None:
+    if rules is None or rules.mesh is None:
+        return
+    bad = {k: v for k, v in rules.rules.items()
+           if k in _PARAM_LOGICAL_AXES and v is not None
+           and PX.axes_size(rules.mesh, v) > 1}
+    if bad:
+        raise ValueError(
+            f"manual gradient-sync modes keep params replicated, but the "
+            f"rules shard parameter axes {bad} (FSDP/TP) — build rules "
+            f"with make_rules(mesh, fsdp=False) or use "
+            f"cross_pod_mode='xla'")
+
+
+def _make_manual_sync_step(model, ocfg: optim.AdamWConfig, *, accum: int,
+                           rules: Optional[MeshRules], mode: str,
+                           bucket_bytes: int, slow_compress_bits: int):
+    """The fully-manual (shard_map over pod+data) gradient-sync steps.
+
+    With no mesh (or a 1-device one) every collective degenerates to the
+    identity and the same code runs locally — that is what makes the
+    single-process CPU equivalence tests possible.
+    """
+    _check_manual_sync_rules(rules)
+    mesh = rules.mesh if rules is not None else None
+    fast_axis, slow_axis = grad_sync_axes(mesh)
+    sync_axes = tuple(a for a in (mesh.axis_names if mesh is not None
+                                  else ()) if a in ("pod", "data"))
+    n_sync = PX.axes_size(mesh, sync_axes)
+    if n_sync == 1:
+        # degenerate (single-cell) mesh: no shard_map is emitted, so the
+        # axis names must not reach any collective either
+        sync_axes = ()
+        fast_axis = slow_axis = None
+    lg = make_loss_and_grad(model, accum=accum)
+
+    def mean_loss(loss):
+        return PX.psum(loss, sync_axes) / n_sync if sync_axes else loss
+
+    def layout_for(params):
+        return make_bucket_layout(params, mesh, bucket_bytes=bucket_bytes)
+
+    def hier_rank(params, batch):
+        loss, grads = lg(params, batch)
+        if sync_axes:
+            grads = jax.tree.map(
+                lambda g: hier_all_reduce_mean(
+                    g, fast_axis=fast_axis, slow_axis=slow_axis,
+                    compress_bits=slow_compress_bits), grads)
+        return mean_loss(loss), grads
+
+    def bucketed_rank(params, batch):
+        layout = layout_for(params)
+        blg = bucketing.make_bucket_loss_and_grad(model, layout,
+                                                  accum=accum)
+        loss, gbuckets = blg(bucketing.flatten_to_buckets(layout, params),
+                             batch)
+        shards = bucketing.hier_reduce_bucket_shards(
+            gbuckets, fast_axis=fast_axis, slow_axis=slow_axis,
+            compress_bits=slow_compress_bits)
+        gnorm = bucketing.shard_global_norm(shards, fast_axis)
+        full = bucketing.all_gather_buckets(shards, fast_axis=fast_axis)
+        grads = bucketing.unflatten_from_buckets(layout, full,
+                                                 dtype=jnp.float32)
+        return mean_loss(loss), grads, gnorm
+
+    def zero1_rank(layout, params, state, batch):
+        blg = bucketing.make_bucket_loss_and_grad(model, layout,
+                                                  accum=accum)
+        # forward from the (replicated) storage params, not from an
+        # all-gather of the masters: params are the previous step's
+        # gathered masters cast to storage dtype, and the forward casts
+        # the buckets to storage dtype anyway, so loss/grads are
+        # bit-identical — and the fast tier carries one full-model
+        # gather per step (updated params) instead of two
+        loss, gbuckets = blg(bucketing.flatten_to_buckets(layout, params),
+                             batch)
+        shards = bucketing.hier_reduce_bucket_shards(
+            gbuckets, fast_axis=fast_axis, slow_axis=slow_axis,
+            compress_bits=slow_compress_bits)
+        gnorm = bucketing.shard_global_norm(shards, fast_axis)
+        new_state, om = optim.apply_flat(ocfg, shards, state, gnorm=gnorm)
+        new_pb = bucketing.all_gather_buckets(new_state.master,
+                                              fast_axis=fast_axis)
+        params = bucketing.unflatten_from_buckets(layout, new_pb)
+        return params, new_state, {"loss": mean_loss(loss), **om}
+
+    def batch_specs(batch):
+        return jax.tree.map(lambda _: P(sync_axes), batch)
+
+    if mode == "hier_bucketed_zero1":
+        def step(params, opt_state, batch):
+            layout = layout_for(params)
+            if not sync_axes:
+                return zero1_rank(layout, params, opt_state, batch)
+            bspec = P(fast_axis) if fast_axis else P()
+            state_specs = optim.BucketedOptState(
+                step=P(), mu=(bspec,) * layout.n_buckets,
+                nu=(bspec,) * layout.n_buckets,
+                master=(bspec,) * layout.n_buckets)
+            pspecs = jax.tree.map(lambda _: P(), params)
+            return PX.shard_map(
+                functools.partial(zero1_rank, layout), mesh=mesh,
+                in_specs=(pspecs, state_specs, batch_specs(batch)),
+                out_specs=(pspecs, state_specs,
+                           {"loss": P(), "lr": P(), "grad_norm": P()}),
+                check_vma=False, axis_names=set(sync_axes),
+            )(params, opt_state, batch)
+        return step
+
+    def step(params, opt_state, batch):
+        if not sync_axes:
+            out = (bucketed_rank if mode == "hier_bucketed"
+                   else hier_rank)(params, batch)
+        else:
+            rank_fn = bucketed_rank if mode == "hier_bucketed" \
+                else hier_rank
+            pspecs = jax.tree.map(lambda _: P(), params)
+            out_specs = ((P(), pspecs, P()) if mode == "hier_bucketed"
+                         else (P(), pspecs))
+            out = PX.shard_map(
+                rank_fn, mesh=mesh,
+                in_specs=(pspecs, batch_specs(batch)),
+                out_specs=out_specs,
+                check_vma=False, axis_names=set(sync_axes),
+            )(params, batch)
+        loss, grads = out[0], out[1]
+        gnorm = out[2] if mode == "hier_bucketed" else None
+        params, opt_state, om = optim.apply(ocfg, params, grads,
+                                            opt_state, gnorm=gnorm)
+        return params, opt_state, {"loss": loss, **om}
+
+    return step
+
+
 def make_train_step(model, ocfg: optim.AdamWConfig, *, accum: int = 1,
                     rules: Optional[MeshRules] = None,
-                    cross_pod_mode: str = "xla"):
+                    cross_pod_mode: str = "xla",
+                    bucket_bytes: int = bucketing.DEFAULT_BUCKET_BYTES,
+                    slow_compress_bits: int = 0):
     """Returns step(params, opt_state, batch) -> (params, opt, metrics)."""
-    lg = make_loss_and_grad(model, accum=accum)
+    if cross_pod_mode not in CROSS_POD_MODES:
+        raise ValueError(f"unknown cross_pod_mode {cross_pod_mode!r}; "
+                         f"known: {CROSS_POD_MODES}")
     mesh = rules.mesh if rules is not None else None
+    if cross_pod_mode in MANUAL_SYNC_MODES:
+        return _make_manual_sync_step(
+            model, ocfg, accum=accum, rules=rules, mode=cross_pod_mode,
+            bucket_bytes=bucket_bytes,
+            slow_compress_bits=slow_compress_bits)
+    lg = make_loss_and_grad(model, accum=accum)
     has_pod = mesh is not None and "pod" in mesh.axis_names
 
     def base_step(params, opt_state, batch):
@@ -130,9 +321,13 @@ def make_train_step(model, ocfg: optim.AdamWConfig, *, accum: int = 1,
 
 def make_jitted_train_step(model, ocfg, *, accum, rules,
                            param_shardings=None, opt_shardings=None,
-                           batch_sharding=None, cross_pod_mode="xla"):
+                           batch_sharding=None, cross_pod_mode="xla",
+                           bucket_bytes=bucketing.DEFAULT_BUCKET_BYTES,
+                           slow_compress_bits=0):
     step = make_train_step(model, ocfg, accum=accum, rules=rules,
-                           cross_pod_mode=cross_pod_mode)
+                           cross_pod_mode=cross_pod_mode,
+                           bucket_bytes=bucket_bytes,
+                           slow_compress_bits=slow_compress_bits)
 
     def wrapped(params, opt_state, batch):
         with use_rules(rules):
@@ -159,6 +354,9 @@ class TrainerConfig:
     accum: int = 1
     async_ckpt: bool = True
     heartbeat_timeout_s: float = 60.0
+    cross_pod_mode: str = "xla"
+    bucket_bytes: int = bucketing.DEFAULT_BUCKET_BYTES
+    slow_compress_bits: int = 0
 
 
 class Trainer:
@@ -176,11 +374,37 @@ class Trainer:
             timeout_s=tcfg.heartbeat_timeout_s)
         self.straggler = StragglerDetector()
         self.step_fn = make_jitted_train_step(
-            model, ocfg, accum=tcfg.accum, rules=rules)
+            model, ocfg, accum=tcfg.accum, rules=rules,
+            cross_pod_mode=tcfg.cross_pod_mode,
+            bucket_bytes=tcfg.bucket_bytes,
+            slow_compress_bits=tcfg.slow_compress_bits)
         self.history: list = []
 
     def _init_state(self, seed: int = 0):
         params = self.model.init(jax.random.key(seed))
+        self._opt_shardings = None
+        if self.tcfg.cross_pod_mode == "hier_bucketed_zero1":
+            mesh = self.rules.mesh if self.rules is not None else None
+            layout = make_bucket_layout(params, mesh,
+                                        bucket_bytes=self.tcfg.bucket_bytes)
+            fast_axis, _ = grad_sync_axes(mesh)
+            if mesh is not None and fast_axis:
+                # build the flat state *already sharded* over the fast
+                # axis — each rank materializes only its 1/F slice (a
+                # device_put after an unsharded init would transiently
+                # hold 3x full-model f32 on one device, the exact peak
+                # ZeRO-1 exists to avoid)
+                bshard = NamedSharding(mesh, P(fast_axis))
+                self._opt_shardings = optim.BucketedOptState(
+                    step=NamedSharding(mesh, P()),
+                    mu=(bshard,) * layout.n_buckets,
+                    nu=(bshard,) * layout.n_buckets,
+                    master=(bshard,) * layout.n_buckets)
+                init_fn = jax.jit(
+                    lambda p: optim.init_bucketed(self.ocfg, p, layout),
+                    out_shardings=self._opt_shardings)
+                return params, init_fn(params)
+            return params, optim.init_bucketed(self.ocfg, params, layout)
         return params, optim.init(self.ocfg, params)
 
     def run(self, *, seed: int = 0, resume: bool = True
@@ -191,9 +415,14 @@ class Trainer:
         if resume:
             last = ckpt_lib.latest_step(tcfg.ckpt_dir)
             if last is not None:
+                # restore the zero1 state straight onto its fast-axis
+                # shards — an unsharded restore would replicate the full
+                # f32 masters on every device until the first step
+                shardings = ((None, self._opt_shardings)
+                             if self._opt_shardings is not None else None)
                 start, (params, opt_state) = ckpt_lib.restore(
                     ckpt_lib.step_dir(tcfg.ckpt_dir, last),
-                    (params, opt_state))
+                    (params, opt_state), shardings=shardings)
         corpus = SyntheticCorpus(self.data_cfg)
         prefetch = Prefetcher(corpus, start_step=start)
         pending = None
