@@ -11,6 +11,12 @@
 # the main process, so mesh construction / collectives are also exercised
 # in-process on a multi-device backend.
 #
+# Pass 1 respects an ambient XLA_FLAGS: CI additionally runs the whole
+# suite with --xla_force_host_platform_device_count=8 (the ci.yml device
+# matrix) so the (pod, data) mesh paths execute multi-device in the main
+# process too.  Subprocess-forking tests pin their own device counts
+# either way (tests/conftest.py).
+#
 # Exits nonzero on any failure or collection error in either pass.
 set -euo pipefail
 cd "$(dirname "$0")/.."

@@ -56,6 +56,7 @@ class Op:
     opcode: str
     operands: List[str]
     attrs: str
+    is_root: bool = False
 
 
 @dataclasses.dataclass
@@ -68,7 +69,7 @@ class Computation:
 _COMP_HEADER = re.compile(
     r"^(?:ENTRY )?%?([\w.\-]+)\s*\((.*?)\)\s*->\s*(.+?)\s*\{\s*$")
 _OP_LINE = re.compile(
-    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(.*?\)|\S+)\s+([\w\-]+)\((.*)$")
+    r"^\s*(ROOT\s+)?%([\w.\-]+)\s*=\s*(\(.*?\)|\S+)\s+([\w\-]+)\((.*)$")
 
 
 def _parse_operands(rest: str) -> Tuple[List[str], str]:
@@ -128,9 +129,10 @@ def parse_module(text: str) -> Dict[str, Computation]:
             continue
         m = _OP_LINE.match(line)
         if m:
-            name, rtype, opcode, rest = m.groups()
+            root, name, rtype, opcode, rest = m.groups()
             operands, attrs = _parse_operands(rest)
-            cur.ops.append(Op(name, rtype, opcode, operands, attrs))
+            cur.ops.append(Op(name, rtype, opcode, operands, attrs,
+                              is_root=bool(root)))
     if entry_name:
         comps["__entry__"] = comps[entry_name]
     return comps
@@ -328,6 +330,142 @@ def analyze(text: str, *, chips_per_pod: Optional[int] = None) -> HloStats:
         return st
 
     return visit("__entry__")
+
+
+# ---------------------------------------------------------------------------
+# slow-collective dependency chains (pipelinability)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SlowChain:
+    """Data-dependency structure of the slow (cross-pod) collectives.
+
+    ``max_depth`` is the length of the longest chain of slow collectives
+    connected by data dependencies: 1 means every slow collective is
+    independent of every other — the overlapped bucket schedule's
+    pipelinability invariant (each bucket's slow hop can be in flight
+    while other buckets' fast phases run).  ``dependent_pairs`` lists
+    (ancestor, descendant) witnesses when the chain is deeper.
+    """
+
+    n_slow: int
+    max_depth: int
+    dependent_pairs: List[Tuple[str, str]]
+
+    @property
+    def independent(self) -> bool:
+        return self.max_depth <= 1
+
+    def to_dict(self):
+        return {"n_slow": self.n_slow, "max_depth": self.max_depth,
+                "independent": self.independent,
+                "dependent_pairs": [list(p) for p in
+                                    self.dependent_pairs[:16]]}
+
+
+def slow_collective_chains(text: str, *, chips_per_pod: int) -> SlowChain:
+    """Prove (or refute) slow-collective independence from lowered HLO.
+
+    Walks the def-use graph of the module: every collective op whose
+    replica groups cross the pod cut (``_crosses_pod``) becomes a node,
+    and node B depends on node A when A is in the transitive operand
+    cone of B.  Called computations (fusion/call/while bodies) are
+    followed with parameter-index binding (``parameter(i)`` ops take the
+    i-th call-operand's cone); ``-done`` halves of async pairs pass
+    their cone through without counting again.  While bodies get one
+    extra cone-propagation pass with the first pass's result folded
+    into the carry (without re-registering the body's collectives), so
+    the while op's consumers see cross-iteration reachability; chains
+    *between iterations of the same while* are not claimed as depth —
+    a trip-counted loop serializes its body regardless, and the flat
+    (scan-free) sync schedules this checker gates contain no whiles.
+    """
+    comps = parse_module(text)
+    depth: Dict[int, int] = {}
+    names: Dict[int, str] = {}
+    pairs: List[Tuple[str, str]] = []
+    counter = iter(range(1 << 30))
+
+    def called_comps(op: Op) -> List[str]:
+        keys = ("calls", "to_apply", "body", "condition")
+        out = []
+        for k in keys:
+            m = re.search(rf"\b{k}=%?([\w.\-]+)", op.attrs)
+            if m and m.group(1) in comps:
+                out.append(m.group(1))
+        return out
+
+    def register(op: Op, qual: str, cone: frozenset) -> frozenset:
+        sid = next(counter)
+        names[sid] = qual
+        depth[sid] = 1 + max((depth[a] for a in cone), default=0)
+        for a in sorted(cone):
+            if len(pairs) < 64:
+                pairs.append((names[a], qual))
+        return cone | {sid}
+
+    def visit(comp_name: str, param_cones: Tuple[frozenset, ...],
+              stack: Tuple[str, ...], *,
+              register_nodes: bool = True) -> frozenset:
+        c = comps.get(comp_name)
+        if c is None or comp_name in stack:
+            return frozenset()
+        cones: Dict[str, frozenset] = {}
+        for pname, pc in zip(c.params, param_cones):
+            cones[pname] = pc
+        out = None
+        for op in c.ops:
+            if op.opcode == "parameter":
+                # bind by parameter index: `%p = f32[..] parameter(i)`
+                # re-declares a computation parameter as an op; its cone
+                # is the matching call operand's, never empty
+                idx = int(op.operands[0]) if (
+                    op.operands and op.operands[0].isdigit()) else -1
+                if 0 <= idx < len(param_cones):
+                    cones[op.name] = param_cones[idx]
+                if op.is_root or (out is None and op is c.ops[-1]):
+                    out = cones.get(op.name, frozenset())
+                continue
+            cone = frozenset().union(
+                *(cones.get(o, frozenset()) for o in op.operands)) \
+                if op.operands else frozenset()
+            subs = called_comps(op)
+            if subs:
+                sub_params = tuple(cones.get(o, frozenset())
+                                   for o in op.operands)
+                for sub in subs:
+                    sub_cone = visit(sub, sub_params,
+                                     stack + (comp_name,),
+                                     register_nodes=register_nodes)
+                    if op.opcode == "while":
+                        # fold the first pass's result back into the
+                        # carry so the while's consumers see
+                        # cross-iteration reachability; propagation
+                        # only — the body's collectives registered on
+                        # the first pass
+                        sub_cone = sub_cone | visit(
+                            sub, tuple(pc | sub_cone
+                                       for pc in sub_params),
+                            stack + (comp_name,), register_nodes=False)
+                    cone = cone | sub_cone
+            oc = op.opcode
+            if (register_nodes
+                    and any(oc.startswith(k) for k in _COLLECTIVES)
+                    and not oc.endswith("-done")
+                    and chips_per_pod
+                    and _crosses_pod(op, chips_per_pod)):
+                cone = register(op, f"{comp_name}/{op.name}", cone)
+            cones[op.name] = cone
+            if op.is_root or (out is None and op is c.ops[-1]):
+                out = cone
+        return out if out is not None else frozenset()
+
+    entry = comps.get("__entry__")
+    if entry is not None:
+        visit(entry.name, (frozenset(),) * len(entry.params), ())
+    return SlowChain(n_slow=len(depth),
+                     max_depth=max(depth.values(), default=0),
+                     dependent_pairs=pairs)
 
 
 # ---------------------------------------------------------------------------

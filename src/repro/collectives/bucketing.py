@@ -46,7 +46,8 @@ import jax
 import jax.numpy as jnp
 
 from repro import parallel as PX
-from repro.collectives.hierarchical import hier_reduce_mean_shard
+from repro.collectives.hierarchical import (fast_reduce_scatter,
+                                            slow_mean_shard)
 
 DEFAULT_BUCKET_BYTES = 32 << 20          # 32 MiB of f32 per bucket
 
@@ -205,17 +206,77 @@ def make_bucket_loss_and_grad(model, layout: BucketLayout, *, accum: int):
 def hier_reduce_bucket_shards(buckets: Sequence[jax.Array], *,
                               fast_axis: Optional[str],
                               slow_axis: Optional[str],
-                              compress_bits: int = 0
-                              ) -> Tuple[jax.Array, ...]:
+                              compress_bits: int = 0,
+                              overlap: bool = False,
+                              residuals: Optional[Sequence[jax.Array]]
+                              = None):
     """One hierarchical reduce per *bucket* (not per tensor).
 
     Returns each rank's globally-meaned contiguous shard of every bucket
     (full buckets when ``fast_axis`` is None / size 1).
+
+    ``overlap=True`` restructures the k-bucket sync as a depth-1 software
+    pipeline: bucket i+1's fast-axis reduce-scatter is issued *before*
+    bucket i's slow hop, so on a backend with asynchronous collectives
+    the slow (DCN/NET) hop of every bucket but the last hides under the
+    next bucket's fast (ICI/SHM) phase.  An ``optimization_barrier``
+    bundles the two in-flight fast shards at each stage boundary so the
+    compiler cannot re-serialize the issue order; no slow collective ever
+    feeds a barrier, so consecutive buckets' slow collectives stay
+    data-independent in the lowered HLO
+    (:func:`repro.analysis.hlo.slow_collective_chains` proves this).
+    Per-bucket arithmetic is shared with the serial schedule
+    (:func:`fast_reduce_scatter` / :func:`slow_mean_shard`), so the
+    result is bitwise-identical; with a single bucket, a trivial fast
+    axis, or no slow axis the pipeline silently degenerates to the
+    serial path.
+
+    ``residuals`` (one per bucket, per-rank shard-shaped, in the same
+    units as the reduce-scattered shard) switches the compressed slow
+    hop to error feedback; the return value is then
+    ``(shards, new_residuals)`` instead of just the shards.
     """
-    return tuple(hier_reduce_mean_shard(b, fast_axis=fast_axis,
-                                        slow_axis=slow_axis,
-                                        compress_bits=compress_bits)
-                 for b in buckets)
+    k = len(buckets)
+    nf = PX.axis_size(fast_axis) if fast_axis is not None else 1
+    ns = PX.axis_size(slow_axis) if slow_axis is not None else 1
+    if residuals is not None and compress_bits != 8:
+        raise ValueError(
+            "error-feedback residuals require the int8 slow hop "
+            f"(compress_bits=8, got {compress_bits}) — without it the "
+            "residuals would silently never update")
+    res_in = tuple(residuals) if residuals is not None else (None,) * k
+    assert len(res_in) == k, (len(res_in), k)
+
+    def slow(shard, res):
+        out = slow_mean_shard(shard, fast_axis=fast_axis,
+                              slow_axis=slow_axis,
+                              compress_bits=compress_bits, residual=res)
+        return out if res is not None else (out, None)
+
+    pipelined = overlap and k >= 2 and nf > 1 and ns > 1
+    shards, res_out = [], []
+    if not pipelined:
+        for b, res in zip(buckets, res_in):
+            s, r = slow(fast_reduce_scatter(b, fast_axis), res)
+            shards.append(s)
+            res_out.append(r)
+    else:
+        cur = fast_reduce_scatter(buckets[0], fast_axis)
+        for i in range(k):
+            nxt = None
+            if i + 1 < k:
+                nxt = fast_reduce_scatter(buckets[i + 1], fast_axis)
+                # pin the pipeline: bucket i+1's reduce-scatter is
+                # bundled with bucket i's shard, so it cannot sink below
+                # bucket i's slow hop
+                cur, nxt = jax.lax.optimization_barrier((cur, nxt))
+            s, r = slow(cur, res_in[i])
+            shards.append(s)
+            res_out.append(r)
+            cur = nxt
+    if residuals is not None:
+        return tuple(shards), tuple(res_out)
+    return tuple(shards)
 
 
 def all_gather_buckets(shards: Sequence[jax.Array], *,

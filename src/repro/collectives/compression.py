@@ -26,22 +26,30 @@ def dequantize_int8(q, scale):
     return q.astype(jnp.float32) * scale
 
 
+def _int8_gather_mean(q, scale, axis: str, *, like):
+    """int8 transport: all_gather quantized shards + per-shard scales,
+    dequantize-mean locally.  The single implementation both the plain
+    and error-feedback slow hops ride (their parity depends on it)."""
+    n = PX.axis_size(axis)
+    qs = PX.all_gather(q, axis, gather_axis=0, tiled=False)      # (n, ...)
+    ss = PX.all_gather(scale, axis, gather_axis=0, tiled=False)  # (n,)
+    deq = qs.astype(jnp.float32) * ss.reshape((n,) + (1,) * like.ndim)
+    return (jnp.sum(deq, axis=0) / n).astype(like.dtype)
+
+
 def compressed_psum_mean(x, axis: str, *, bits: int = 8):
     """Mean-reduce ``x`` over mesh axis ``axis`` with compressed transport.
 
     Runs inside shard_map.  bits=16 casts to bf16 (psum native); bits=8
     all_gathers int8 + per-shard scales and averages locally.
     """
-    n = PX.axis_size(axis)
     if bits == 16:
+        n = PX.axis_size(axis)
         y = PX.psum(x.astype(jnp.bfloat16), axis)
         return (y.astype(jnp.float32) / n).astype(x.dtype)
     assert bits == 8, bits
     q, scale = quantize_int8(x)
-    qs = PX.all_gather(q, axis, gather_axis=0, tiled=False)      # (n, ...)
-    ss = PX.all_gather(scale, axis, gather_axis=0, tiled=False)  # (n,)
-    deq = qs.astype(jnp.float32) * ss.reshape((n,) + (1,) * x.ndim)
-    return (jnp.sum(deq, axis=0) / n).astype(x.dtype)
+    return _int8_gather_mean(q, scale, axis, like=x)
 
 
 def apply_error_feedback(grad, residual: Optional[jax.Array], *,
@@ -53,3 +61,21 @@ def apply_error_feedback(grad, residual: Optional[jax.Array], *,
     q, scale = quantize_int8(g)
     gq = dequantize_int8(q, scale)
     return gq.astype(grad.dtype), (g - gq).astype(jnp.float32)
+
+
+def compressed_psum_mean_ef(x, residual, axis: str, *, bits: int = 8):
+    """:func:`compressed_psum_mean` with error feedback on the int8 hop.
+
+    The residual from previous steps is folded into ``x`` *before*
+    quantization and the part the int8 grid cannot represent is carried
+    forward, so the quantization noise telescopes instead of
+    accumulating (:func:`apply_error_feedback`, fused here so the value
+    that crosses the slow tier is quantized exactly once).  Runs inside
+    shard_map; the residual is per-rank state in the same units as ``x``.
+    Returns ``(mean, new_residual)``.
+    """
+    assert bits == 8, "error feedback is defined for the int8 hop"
+    g = x.astype(jnp.float32) + residual.astype(jnp.float32)
+    q, scale = quantize_int8(g)
+    new_res = g - dequantize_int8(q, scale)
+    return _int8_gather_mean(q, scale, axis, like=x), new_res

@@ -27,8 +27,48 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import parallel as PX
-from repro.collectives.compression import compressed_psum_mean
+from repro.collectives.compression import (compressed_psum_mean,
+                                           compressed_psum_mean_ef)
 from repro.parallel.transport import is_slow_axis
+
+
+def fast_reduce_scatter(flat, fast_axis: Optional[str]):
+    """Stage 1 of the hierarchical schedule: fast-axis reduce-scatter.
+
+    Identity when the fast axis is absent or trivial.  ``flat`` must be
+    1-D with length divisible by the fast-axis size.  Exposed separately
+    from :func:`hier_reduce_mean_shard` so the bucketed paths can
+    software-pipeline it against the previous bucket's slow hop.
+    """
+    nf = PX.axis_size(fast_axis) if fast_axis is not None else 1
+    return PX.reduce_scatter_flat(flat, fast_axis) if nf > 1 else flat
+
+
+def slow_mean_shard(shard, *, fast_axis: Optional[str],
+                    slow_axis: Optional[str], compress_bits: int = 0,
+                    residual=None):
+    """Stage 2: slow-axis mean (optionally compressed) + /F normalization.
+
+    ``shard`` is one rank's fast-axis reduce-scattered slice (stage 1's
+    output).  When ``residual`` is given the compressed slow hop runs
+    with error feedback (int8 only) and the new residual — in the same
+    pre-normalization units as the input — is returned alongside:
+    ``(meaned_shard, new_residual)``.  With ``residual=None`` only the
+    shard is returned.
+    """
+    nf = PX.axis_size(fast_axis) if fast_axis is not None else 1
+    if slow_axis is not None:
+        if compress_bits and residual is not None:
+            shard, residual = compressed_psum_mean_ef(
+                shard, residual, slow_axis, bits=compress_bits)
+        elif compress_bits:
+            shard = compressed_psum_mean(shard, slow_axis,
+                                         bits=compress_bits)
+        else:
+            ns = PX.axis_size(slow_axis)
+            shard = PX.psum(shard, slow_axis) / ns
+    shard = shard / nf
+    return shard if residual is None else (shard, residual)
 
 
 def hier_reduce_mean_shard(flat, *, fast_axis: Optional[str],
@@ -44,18 +84,15 @@ def hier_reduce_mean_shard(flat, *, fast_axis: Optional[str],
 
     ``flat`` must be 1-D with length divisible by the fast-axis size.
     Either axis may be ``None`` (single-tier / single-device meshes), in
-    which case that hop is skipped.
+    which case that hop is skipped.  Composition of
+    :func:`fast_reduce_scatter` and :func:`slow_mean_shard`, which the
+    overlapped bucket schedule calls stage-by-stage — per-bucket
+    arithmetic is therefore shared, making serial/overlapped bitwise
+    parity structural.
     """
-    nf = PX.axis_size(fast_axis) if fast_axis is not None else 1
-    shard = PX.reduce_scatter_flat(flat, fast_axis) if nf > 1 else flat
-    if slow_axis is not None:
-        if compress_bits:
-            shard = compressed_psum_mean(shard, slow_axis,
-                                         bits=compress_bits)
-        else:
-            ns = PX.axis_size(slow_axis)
-            shard = PX.psum(shard, slow_axis) / ns
-    return shard / nf
+    return slow_mean_shard(fast_reduce_scatter(flat, fast_axis),
+                           fast_axis=fast_axis, slow_axis=slow_axis,
+                           compress_bits=compress_bits)
 
 
 def hier_all_reduce_mean(x, *, fast_axis: Optional[str],

@@ -163,6 +163,81 @@ def jct_scale(model: str, batch: int, size: int, view: PlacementView, *,
 
 
 # ---------------------------------------------------------------------------
+# bucketed gradient-sync schedule (serial vs software-pipelined)
+# ---------------------------------------------------------------------------
+
+def bucket_sync_times(bucket_numels: Sequence[int], *, nf: int, ns: int,
+                      fast_bps: float, slow_bps: float,
+                      bytes_per_elem: float = 4.0,
+                      slow_bytes_per_elem: Optional[float] = None
+                      ) -> Tuple[List[float], List[float], List[float]]:
+    """Per-bucket (fast reduce-scatter, slow hop, fast all-gather) times.
+
+    Ring costs: the fast stages move ``(F-1)/F`` of the bucket over the
+    fast tier; the slow hop all-reduces each rank's ``1/F`` shard over
+    the ``ns``-way slow tier (``2(S-1)/S`` ring bytes).
+    ``slow_bytes_per_elem`` prices slow-hop compression (1.0 for int8 on
+    f32 buckets); either tier degenerates to zero time when its axis is
+    trivial — mirroring ``hier_reduce_bucket_shards``'s identity paths.
+    """
+    sb = (slow_bytes_per_elem if slow_bytes_per_elem is not None
+          else bytes_per_elem)
+    fast_s, slow_s, drain_s = [], [], []
+    for n in bucket_numels:
+        full = n * bytes_per_elem
+        shard = full / max(nf, 1)
+        hop = (full - shard) / fast_bps if nf > 1 else 0.0
+        slow = (2.0 * (n / max(nf, 1)) * sb * (ns - 1) / ns / slow_bps
+                if ns > 1 else 0.0)
+        fast_s.append(hop)
+        slow_s.append(slow)
+        drain_s.append(hop)
+    return fast_s, slow_s, drain_s
+
+
+def hier_sync_makespan(fast_s: Sequence[float], slow_s: Sequence[float],
+                       drain_s: Sequence[float], *,
+                       overlap: bool) -> float:
+    """Makespan of the k-bucket hierarchical sync on a two-channel model.
+
+    Serial: every stage of every bucket sits on the critical path.
+    Overlapped: the fast tier streams reduce-scatters ahead (the
+    software pipeline issues bucket i+1's before bucket i's slow hop),
+    the slow tier pipelines hops back-to-back behind them, and the
+    all-gathers drain in bucket order once both their shard's slow hop
+    and the fast channel are free.  This is the quantity the overlapped
+    train schedule exposes; ``serial - overlapped`` is the slow-tier
+    latency the pipeline hides.
+    """
+    if not overlap:
+        return float(sum(fast_s) + sum(slow_s) + sum(drain_s))
+    t_fast = 0.0
+    t_slow = 0.0
+    slow_done = []
+    for f, s in zip(fast_s, slow_s):
+        t_fast += f
+        t_slow = max(t_slow, t_fast) + s
+        slow_done.append(t_slow)
+    for d, done in zip(drain_s, slow_done):
+        t_fast = max(t_fast, done) + d
+    return float(max(t_fast, t_slow))
+
+
+def exposed_slow_fraction(fast_s: Sequence[float],
+                          slow_s: Sequence[float],
+                          drain_s: Sequence[float], *,
+                          overlap: bool) -> float:
+    """Fraction of the slow tier's total busy time left on the critical
+    path (1.0 = fully exposed, as in the serial schedule)."""
+    total_slow = float(sum(slow_s))
+    if total_slow <= 0.0:
+        return 0.0
+    span = hier_sync_makespan(fast_s, slow_s, drain_s, overlap=overlap)
+    fast_busy = float(sum(fast_s) + sum(drain_s))
+    return max(0.0, span - fast_busy) / total_slow
+
+
+# ---------------------------------------------------------------------------
 # calibration (§5.2)
 # ---------------------------------------------------------------------------
 

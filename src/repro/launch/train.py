@@ -38,6 +38,18 @@ def main():
                          "pure data-parallel mesh)")
     ap.add_argument("--bucket-mb", type=int, default=32,
                     help="bucket capacity for the hier_bucketed* modes")
+    ap.add_argument("--overlap", action="store_true",
+                    help="pipeline bucket i+1's fast reduce-scatter under "
+                         "bucket i's slow hop (hier_bucketed* modes; "
+                         "bitwise-identical losses)")
+    ap.add_argument("--slow-compress-bits", type=int, default=0,
+                    choices=(0, 8, 16),
+                    help="compress the slow (cross-pod) hop: 16=bf16, "
+                         "8=int8+scale")
+    ap.add_argument("--error-feedback", action="store_true",
+                    help="carry int8 quantization residuals across steps "
+                         "(requires --slow-compress-bits 8 and a "
+                         "hier_bucketed* mode)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -63,7 +75,10 @@ def main():
                       ckpt_dir=args.ckpt_dir, log_every=10,
                       accum=args.accum,
                       cross_pod_mode=args.cross_pod_mode,
-                      bucket_bytes=args.bucket_mb << 20),
+                      bucket_bytes=args.bucket_mb << 20,
+                      slow_compress_bits=args.slow_compress_bits,
+                      overlap=args.overlap,
+                      slow_error_feedback=args.error_feedback),
         DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
                    global_batch=args.batch),
         rules=rules)

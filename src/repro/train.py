@@ -33,7 +33,7 @@ import dataclasses
 import functools
 import os
 import time
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -51,7 +51,24 @@ from repro.elastic import HeartbeatMonitor, StragglerDetector
 from repro.sharding import MeshRules, grad_sync_axes, use_rules
 
 MANUAL_SYNC_MODES = ("hier", "hier_bucketed", "hier_bucketed_zero1")
+BUCKETED_SYNC_MODES = ("hier_bucketed", "hier_bucketed_zero1")
 CROSS_POD_MODES = ("xla", "compressed") + MANUAL_SYNC_MODES
+
+
+class EFState(NamedTuple):
+    """Optimizer state + int8 error-feedback residuals.
+
+    ``residuals`` holds, per bucket, the part of each rank's (fast-axis
+    reduce-scattered) gradient shard the int8 slow hop could not
+    represent, carried across steps so the quantization noise telescopes
+    (``collectives.compression.compressed_psum_mean_ef``).  Globally each
+    residual is a flat ``(S * bucket_size,)`` f32 array sharded over
+    (slow, fast) — every (pod, data) rank owns its private slice, since
+    quantization error is per-rank state.
+    """
+
+    opt: Any                       # OptState | BucketedOptState
+    residuals: Tuple[jax.Array, ...]
 
 
 def _split_micro(batch: Dict[str, jax.Array], accum: int):
@@ -122,6 +139,30 @@ def make_bucket_layout(params_or_shapes, mesh=None, *,
                                   bucket_bytes=bucket_bytes, align=align)
 
 
+def _residual_spec(fast_axis, slow_axis) -> P:
+    """PartitionSpec of one global error-feedback residual array."""
+    axes = tuple(a for a in (slow_axis, fast_axis) if a)
+    return P(axes) if axes else P()
+
+
+def init_slow_residuals(params_or_shapes, mesh=None, *,
+                        bucket_bytes: int = bucketing.DEFAULT_BUCKET_BYTES
+                        ) -> Tuple[jax.Array, ...]:
+    """Zero error-feedback residuals for ``slow_error_feedback=True``.
+
+    One flat f32 array per bucket of the layout the train step derives.
+    Global size is ``S * bucket_size`` (S = slow-axis size): sharded over
+    (slow, fast), each rank holds a residual the shape of its fast-axis
+    reduce-scattered bucket shard.
+    """
+    layout = make_bucket_layout(params_or_shapes, mesh,
+                                bucket_bytes=bucket_bytes)
+    _, slow_axis = grad_sync_axes(mesh)
+    ns = mesh.shape[slow_axis] if (mesh is not None and slow_axis) else 1
+    return tuple(jnp.zeros((ns * c,), jnp.float32)
+                 for c in layout.bucket_sizes)
+
+
 # logical axes that shard *parameters* (vs batch/sequence activations) —
 # the manual sync modes keep params replicated, so rules mapping any of
 # these onto a real mesh axis would be silently ignored; reject instead
@@ -145,12 +186,19 @@ def _check_manual_sync_rules(rules: Optional[MeshRules]) -> None:
 
 def _make_manual_sync_step(model, ocfg: optim.AdamWConfig, *, accum: int,
                            rules: Optional[MeshRules], mode: str,
-                           bucket_bytes: int, slow_compress_bits: int):
+                           bucket_bytes: int, slow_compress_bits: int,
+                           overlap: bool = False,
+                           slow_error_feedback: bool = False):
     """The fully-manual (shard_map over pod+data) gradient-sync steps.
 
     With no mesh (or a 1-device one) every collective degenerates to the
     identity and the same code runs locally — that is what makes the
     single-process CPU equivalence tests possible.
+
+    ``overlap`` pipelines consecutive buckets' syncs (bucketed modes;
+    bitwise-identical results — see ``hier_reduce_bucket_shards``).
+    ``slow_error_feedback`` carries int8 quantization residuals across
+    steps; the step's opt-state argument then is an :class:`EFState`.
     """
     _check_manual_sync_rules(rules)
     mesh = rules.mesh if rules is not None else None
@@ -163,6 +211,7 @@ def _make_manual_sync_step(model, ocfg: optim.AdamWConfig, *, accum: int,
         # axis names must not reach any collective either
         sync_axes = ()
         fast_axis = slow_axis = None
+    ef = slow_error_feedback
     lg = make_loss_and_grad(model, accum=accum)
 
     def mean_loss(loss):
@@ -180,22 +229,39 @@ def _make_manual_sync_step(model, ocfg: optim.AdamWConfig, *, accum: int,
                     compress_bits=slow_compress_bits), grads)
         return mean_loss(loss), grads
 
-    def bucketed_rank(params, batch):
+    def reduce_buckets(gbuckets, residuals):
+        """The (optionally pipelined, optionally EF) per-bucket reduce.
+
+        Returns (shards, new_residuals); residuals are ``()`` when error
+        feedback is off, so rank functions can pass them through shard_map
+        uniformly (an empty pytree needs no specs).
+        """
+        if ef:
+            return bucketing.hier_reduce_bucket_shards(
+                gbuckets, fast_axis=fast_axis, slow_axis=slow_axis,
+                compress_bits=slow_compress_bits, overlap=overlap,
+                residuals=residuals)
+        shards = bucketing.hier_reduce_bucket_shards(
+            gbuckets, fast_axis=fast_axis, slow_axis=slow_axis,
+            compress_bits=slow_compress_bits, overlap=overlap)
+        return shards, ()
+
+    def bucketed_rank(params, batch, residuals):
         layout = layout_for(params)
         blg = bucketing.make_bucket_loss_and_grad(model, layout,
                                                   accum=accum)
         loss, gbuckets = blg(bucketing.flatten_to_buckets(layout, params),
                              batch)
-        shards = bucketing.hier_reduce_bucket_shards(
-            gbuckets, fast_axis=fast_axis, slow_axis=slow_axis,
-            compress_bits=slow_compress_bits)
+        shards, new_res = reduce_buckets(gbuckets, residuals)
         gnorm = bucketing.shard_global_norm(shards, fast_axis)
         full = bucketing.all_gather_buckets(shards, fast_axis=fast_axis)
         grads = bucketing.unflatten_from_buckets(layout, full,
                                                  dtype=jnp.float32)
-        return mean_loss(loss), grads, gnorm
+        return mean_loss(loss), grads, gnorm, new_res
 
     def zero1_rank(layout, params, state, batch):
+        opt_state, residuals = ((state.opt, state.residuals) if ef
+                                else (state, ()))
         blg = bucketing.make_bucket_loss_and_grad(model, layout,
                                                   accum=accum)
         # forward from the (replicated) storage params, not from an
@@ -206,18 +272,24 @@ def _make_manual_sync_step(model, ocfg: optim.AdamWConfig, *, accum: int,
         # gather per step (updated params) instead of two
         loss, gbuckets = blg(bucketing.flatten_to_buckets(layout, params),
                              batch)
-        shards = bucketing.hier_reduce_bucket_shards(
-            gbuckets, fast_axis=fast_axis, slow_axis=slow_axis,
-            compress_bits=slow_compress_bits)
+        shards, new_res = reduce_buckets(gbuckets, residuals)
         gnorm = bucketing.shard_global_norm(shards, fast_axis)
-        new_state, om = optim.apply_flat(ocfg, shards, state, gnorm=gnorm)
+        new_state, om = optim.apply_flat(ocfg, shards, opt_state,
+                                         gnorm=gnorm)
         new_pb = bucketing.all_gather_buckets(new_state.master,
                                               fast_axis=fast_axis)
         params = bucketing.unflatten_from_buckets(layout, new_pb)
+        if ef:
+            new_state = EFState(new_state, new_res)
         return params, new_state, {"loss": mean_loss(loss), **om}
 
     def batch_specs(batch):
         return jax.tree.map(lambda _: P(sync_axes), batch)
+
+    def residual_specs(layout):
+        if not ef:
+            return ()
+        return (_residual_spec(fast_axis, slow_axis),) * layout.n_buckets
 
     if mode == "hier_bucketed_zero1":
         def step(params, opt_state, batch):
@@ -229,6 +301,8 @@ def _make_manual_sync_step(model, ocfg: optim.AdamWConfig, *, accum: int,
                 step=P(), mu=(bspec,) * layout.n_buckets,
                 nu=(bspec,) * layout.n_buckets,
                 master=(bspec,) * layout.n_buckets)
+            if ef:
+                state_specs = EFState(state_specs, residual_specs(layout))
             pspecs = jax.tree.map(lambda _: P(), params)
             return PX.shard_map(
                 functools.partial(zero1_rank, layout), mesh=mesh,
@@ -240,25 +314,38 @@ def _make_manual_sync_step(model, ocfg: optim.AdamWConfig, *, accum: int,
         return step
 
     def step(params, opt_state, batch):
+        inner_opt = opt_state.opt if ef else opt_state
+        ef_res = opt_state.residuals if ef else ()
+        new_res = ()
         if not sync_axes:
-            out = (bucketed_rank if mode == "hier_bucketed"
-                   else hier_rank)(params, batch)
-        else:
-            rank_fn = bucketed_rank if mode == "hier_bucketed" \
-                else hier_rank
+            if mode == "hier_bucketed":
+                loss, grads, gnorm, new_res = bucketed_rank(
+                    params, batch, ef_res)
+            else:
+                loss, grads = hier_rank(params, batch)
+                gnorm = None
+        elif mode == "hier_bucketed":
+            layout = layout_for(params)
             pspecs = jax.tree.map(lambda _: P(), params)
-            out_specs = ((P(), pspecs, P()) if mode == "hier_bucketed"
-                         else (P(), pspecs))
-            out = PX.shard_map(
-                rank_fn, mesh=mesh,
+            rspecs = residual_specs(layout)
+            loss, grads, gnorm, new_res = PX.shard_map(
+                bucketed_rank, mesh=mesh,
+                in_specs=(pspecs, batch_specs(batch), rspecs),
+                out_specs=(P(), pspecs, P(), rspecs),
+                check_vma=False, axis_names=set(sync_axes),
+            )(params, batch, ef_res)
+        else:
+            pspecs = jax.tree.map(lambda _: P(), params)
+            loss, grads = PX.shard_map(
+                hier_rank, mesh=mesh,
                 in_specs=(pspecs, batch_specs(batch)),
-                out_specs=out_specs,
+                out_specs=(P(), pspecs),
                 check_vma=False, axis_names=set(sync_axes),
             )(params, batch)
-        loss, grads = out[0], out[1]
-        gnorm = out[2] if mode == "hier_bucketed" else None
-        params, opt_state, om = optim.apply(ocfg, params, grads,
-                                            opt_state, gnorm=gnorm)
+            gnorm = None
+        params, inner_opt, om = optim.apply(ocfg, params, grads,
+                                            inner_opt, gnorm=gnorm)
+        opt_state = EFState(inner_opt, new_res) if ef else inner_opt
         return params, opt_state, {"loss": loss, **om}
 
     return step
@@ -268,17 +355,41 @@ def make_train_step(model, ocfg: optim.AdamWConfig, *, accum: int = 1,
                     rules: Optional[MeshRules] = None,
                     cross_pod_mode: str = "xla",
                     bucket_bytes: int = bucketing.DEFAULT_BUCKET_BYTES,
-                    slow_compress_bits: int = 0):
-    """Returns step(params, opt_state, batch) -> (params, opt, metrics)."""
+                    slow_compress_bits: int = 0,
+                    overlap: bool = False,
+                    slow_error_feedback: bool = False):
+    """Returns step(params, opt_state, batch) -> (params, opt, metrics).
+
+    ``overlap=True`` (bucketed modes only) software-pipelines the
+    per-bucket hierarchical sync: bucket i+1's fast-axis reduce-scatter
+    is issued under bucket i's slow hop.  Bitwise-identical losses; a
+    no-op on single-bucket layouts and size-1 meshes.
+
+    ``slow_error_feedback=True`` (bucketed modes, requires
+    ``slow_compress_bits=8``) carries each rank's int8 quantization
+    residual across steps.  The step then takes/returns an
+    :class:`EFState` wrapping the optimizer state (build the residuals
+    with :func:`init_slow_residuals`).
+    """
     if cross_pod_mode not in CROSS_POD_MODES:
         raise ValueError(f"unknown cross_pod_mode {cross_pod_mode!r}; "
                          f"known: {CROSS_POD_MODES}")
+    if ((overlap or slow_error_feedback)
+            and cross_pod_mode not in BUCKETED_SYNC_MODES):
+        raise ValueError(
+            f"overlap/slow_error_feedback apply to the bucketed sync "
+            f"modes {BUCKETED_SYNC_MODES}, not {cross_pod_mode!r}")
+    if slow_error_feedback and slow_compress_bits != 8:
+        raise ValueError(
+            "slow_error_feedback carries int8 quantization residuals; "
+            f"it requires slow_compress_bits=8 (got {slow_compress_bits})")
     mesh = rules.mesh if rules is not None else None
     if cross_pod_mode in MANUAL_SYNC_MODES:
         return _make_manual_sync_step(
             model, ocfg, accum=accum, rules=rules, mode=cross_pod_mode,
             bucket_bytes=bucket_bytes,
-            slow_compress_bits=slow_compress_bits)
+            slow_compress_bits=slow_compress_bits, overlap=overlap,
+            slow_error_feedback=slow_error_feedback)
     lg = make_loss_and_grad(model, accum=accum)
     has_pod = mesh is not None and "pod" in mesh.axis_names
 
@@ -323,11 +434,14 @@ def make_jitted_train_step(model, ocfg, *, accum, rules,
                            param_shardings=None, opt_shardings=None,
                            batch_sharding=None, cross_pod_mode="xla",
                            bucket_bytes=bucketing.DEFAULT_BUCKET_BYTES,
-                           slow_compress_bits=0):
+                           slow_compress_bits=0, overlap=False,
+                           slow_error_feedback=False):
     step = make_train_step(model, ocfg, accum=accum, rules=rules,
                            cross_pod_mode=cross_pod_mode,
                            bucket_bytes=bucket_bytes,
-                           slow_compress_bits=slow_compress_bits)
+                           slow_compress_bits=slow_compress_bits,
+                           overlap=overlap,
+                           slow_error_feedback=slow_error_feedback)
 
     def wrapped(params, opt_state, batch):
         with use_rules(rules):
@@ -357,6 +471,8 @@ class TrainerConfig:
     cross_pod_mode: str = "xla"
     bucket_bytes: int = bucketing.DEFAULT_BUCKET_BYTES
     slow_compress_bits: int = 0
+    overlap: bool = False
+    slow_error_feedback: bool = False
 
 
 class Trainer:
@@ -377,14 +493,30 @@ class Trainer:
             model, ocfg, accum=tcfg.accum, rules=rules,
             cross_pod_mode=tcfg.cross_pod_mode,
             bucket_bytes=tcfg.bucket_bytes,
-            slow_compress_bits=tcfg.slow_compress_bits)
+            slow_compress_bits=tcfg.slow_compress_bits,
+            overlap=tcfg.overlap,
+            slow_error_feedback=tcfg.slow_error_feedback)
         self.history: list = []
+
+    def _wrap_ef(self, params, opt_state, mesh):
+        """Wrap the optimizer state with sharded zero EF residuals."""
+        res = init_slow_residuals(params, mesh,
+                                  bucket_bytes=self.tcfg.bucket_bytes)
+        fast_axis, slow_axis = grad_sync_axes(mesh)
+        if mesh is not None and (fast_axis or slow_axis):
+            rshard = NamedSharding(mesh,
+                                   _residual_spec(fast_axis, slow_axis))
+            res = tuple(jax.device_put(r, rshard) for r in res)
+            if self._opt_shardings is not None:
+                self._opt_shardings = EFState(self._opt_shardings,
+                                              (rshard,) * len(res))
+        return EFState(opt_state, res)
 
     def _init_state(self, seed: int = 0):
         params = self.model.init(jax.random.key(seed))
         self._opt_shardings = None
+        mesh = self.rules.mesh if self.rules is not None else None
         if self.tcfg.cross_pod_mode == "hier_bucketed_zero1":
-            mesh = self.rules.mesh if self.rules is not None else None
             layout = make_bucket_layout(params, mesh,
                                         bucket_bytes=self.tcfg.bucket_bytes)
             fast_axis, _ = grad_sync_axes(mesh)
@@ -403,12 +535,28 @@ class Trainer:
                 init_fn = jax.jit(
                     lambda p: optim.init_bucketed(self.ocfg, p, layout),
                     out_shardings=self._opt_shardings)
-                return params, init_fn(params)
-            return params, optim.init_bucketed(self.ocfg, params, layout)
-        return params, optim.init(self.ocfg, params)
+                opt_state = init_fn(params)
+            else:
+                opt_state = optim.init_bucketed(self.ocfg, params, layout)
+        else:
+            opt_state = optim.init(self.ocfg, params)
+        if self.tcfg.slow_error_feedback:
+            return params, self._wrap_ef(params, opt_state, mesh)
+        return params, opt_state
 
     def run(self, *, seed: int = 0, resume: bool = True
             ) -> Dict[str, Any]:
+        # sharding constraints inside the jitted step trace against the
+        # ambient mesh context; without it any --data-parallel launch
+        # fails at first trace (tests enter the mesh themselves, which
+        # is why only the launcher path ever hit this)
+        mesh = self.rules.mesh if self.rules is not None else None
+        if mesh is not None:
+            with mesh:
+                return self._run(seed=seed, resume=resume)
+        return self._run(seed=seed, resume=resume)
+
+    def _run(self, *, seed: int, resume: bool) -> Dict[str, Any]:
         tcfg = self.tcfg
         start = 0
         params, opt_state = self._init_state(seed)

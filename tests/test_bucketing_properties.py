@@ -1,0 +1,126 @@
+"""Property-based tests for the bucket layout planner + flatten/unflatten.
+
+Uses real ``hypothesis`` when installed, else the deterministic shim in
+``tests/_hypothesis_stub.py`` (same strategy API) — either way each
+property runs over many random leaf shape/dtype trees.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # no-network env: deterministic example-based shim
+    from tests._hypothesis_stub import given, settings, st
+
+from repro.collectives import bucketing as BK
+
+_FLOAT_DTYPES = (jnp.float32, jnp.bfloat16, jnp.float16)
+
+
+def _random_tree(seed: int, n_leaves: int):
+    """A nested dict of float leaves with random shapes/dtypes."""
+    rng = np.random.default_rng(seed)
+    tree = {}
+    for i in range(n_leaves):
+        ndim = int(rng.integers(0, 4))
+        shape = tuple(int(rng.integers(1, 7)) for _ in range(ndim))
+        dtype = _FLOAT_DTYPES[int(rng.integers(len(_FLOAT_DTYPES)))]
+        # bf16/f16 values must survive the f32 round-trip bitwise, which
+        # any representable value does; use small integers + halves
+        vals = rng.integers(-8, 9, size=shape).astype(np.float32) / 2.0
+        leaf = jnp.asarray(vals, dtype)
+        if i % 3 == 2:
+            tree.setdefault("nested", {})[f"l{i}"] = leaf
+        else:
+            tree[f"l{i}"] = leaf
+    return tree
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10**6), n_leaves=st.integers(1, 8),
+       bucket_bytes=st.sampled_from([4, 64, 512, 1 << 20]),
+       align=st.integers(1, 8))
+def test_layout_slots_nonoverlapping_and_aligned(seed, n_leaves,
+                                                 bucket_bytes, align):
+    tree = _random_tree(seed, n_leaves)
+    layout = BK.plan_buckets(tree, bucket_bytes=bucket_bytes, align=align)
+    # every bucket size is a multiple of align (fast-axis divisible)
+    assert all(c % align == 0 for c in layout.bucket_sizes)
+    assert layout.n_buckets == len(layout.bucket_sizes) >= 1
+    # slots tile each bucket contiguously: first-fit in flatten order
+    # means offsets are exactly the running fill, no overlaps, no holes
+    fill = [0] * layout.n_buckets
+    for slot in layout.slots:
+        assert slot.offset == fill[slot.bucket]
+        assert slot.size == int(np.prod(slot.shape))   # prod(()) == 1
+        fill[slot.bucket] += slot.size
+    for b, f in enumerate(fill):
+        assert f <= layout.bucket_sizes[b]
+    assert layout.n_elements() == sum(fill)
+    assert layout.n_padded_elements() >= layout.n_elements()
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10**6), n_leaves=st.integers(1, 8),
+       bucket_bytes=st.sampled_from([4, 64, 512, 1 << 20]),
+       align=st.integers(1, 8))
+def test_flatten_unflatten_roundtrip_exact(seed, n_leaves, bucket_bytes,
+                                           align):
+    tree = _random_tree(seed, n_leaves)
+    layout = BK.plan_buckets(tree, bucket_bytes=bucket_bytes, align=align)
+    buckets = BK.flatten_to_buckets(layout, tree)
+    assert all(b.dtype == jnp.float32 and b.ndim == 1 for b in buckets)
+    assert tuple(b.shape[0] for b in buckets) == layout.bucket_sizes
+    back = BK.unflatten_from_buckets(layout, buckets)
+    assert jax.tree.structure(back) == jax.tree.structure(tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10**6), n_leaves=st.integers(1, 8),
+       bucket_bytes=st.sampled_from([64, 512]))
+def test_layout_deterministic_and_shape_only(seed, n_leaves,
+                                             bucket_bytes):
+    """Planning is a pure function of (structure, shapes, dtypes) —
+    identical for concrete arrays, avals, and across repeated calls."""
+    tree = _random_tree(seed, n_leaves)
+    l1 = BK.plan_buckets(tree, bucket_bytes=bucket_bytes, align=2)
+    l2 = BK.plan_buckets(tree, bucket_bytes=bucket_bytes, align=2)
+    l3 = BK.plan_buckets(jax.eval_shape(lambda: tree),
+                         bucket_bytes=bucket_bytes, align=2)
+    assert l1.slots == l2.slots == l3.slots
+    assert l1.bucket_sizes == l2.bucket_sizes == l3.bucket_sizes
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10**6), n_leaves=st.integers(2, 6),
+       bucket_bytes=st.sampled_from([64, 256]))
+def test_first_fit_invariant_to_equal_leaf_swaps(seed, n_leaves,
+                                                 bucket_bytes):
+    """Swapping two leaves with identical shape/dtype yields the same
+    first-fit layout geometry (slots differ only in which leaf they
+    name, not in placement)."""
+    rng = np.random.default_rng(seed)
+    shape = tuple(int(rng.integers(1, 5)) for _ in range(2))
+    # keys sort alphabetically in flatten order; a/b are the equal pair
+    tree = {"a": jnp.zeros(shape, jnp.float32),
+            "b": jnp.ones(shape, jnp.float32)}
+    for i in range(n_leaves):
+        sz = int(rng.integers(1, 30))
+        tree[f"c{i}"] = jnp.full((sz,), float(i), jnp.float32)
+    swapped = dict(tree)
+    swapped["a"], swapped["b"] = tree["b"], tree["a"]
+    l1 = BK.plan_buckets(tree, bucket_bytes=bucket_bytes, align=2)
+    l2 = BK.plan_buckets(swapped, bucket_bytes=bucket_bytes, align=2)
+    assert l1.slots == l2.slots            # placement is shape-driven
+    assert l1.bucket_sizes == l2.bucket_sizes
+    # and the values still round-trip to their own leaves
+    back = BK.unflatten_from_buckets(l2,
+                                     BK.flatten_to_buckets(l2, swapped))
+    np.testing.assert_array_equal(np.asarray(back["a"]),
+                                  np.asarray(swapped["a"]))
+    np.testing.assert_array_equal(np.asarray(back["b"]),
+                                  np.asarray(swapped["b"]))

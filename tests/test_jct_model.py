@@ -1,7 +1,10 @@
 """Job-level performance model: the §5.4 measured effects."""
 import pytest
 
-from repro.core.jct_model import (WORKLOADS, PlacementView, iteration_time,
+from repro.core.jct_model import (WORKLOADS, PlacementView,
+                                  bucket_sync_times,
+                                  exposed_slow_fraction,
+                                  hier_sync_makespan, iteration_time,
                                   jct_scale)
 
 
@@ -69,3 +72,66 @@ def test_jct_scale_reference_is_unity():
     for name in ("resnet50", "bert-base", "t5-small"):
         assert jct_scale(name, 64, 4, _view(["1g.5gb"] * 4, [2, 2]),
                          train=True) == pytest.approx(1.0, rel=1e-6)
+
+
+# ------------------------------------------------- bucket sync schedule
+
+def test_hier_sync_makespan_serial_is_stage_sum():
+    f, s, d = [1.0, 2.0], [10.0, 5.0], [1.5, 0.5]
+    assert hier_sync_makespan(f, s, d, overlap=False) == \
+        pytest.approx(sum(f) + sum(s) + sum(d))
+
+
+def test_hier_sync_makespan_overlap_hides_slow_dominated():
+    # 4 equal buckets, slow >> fast: the pipeline leaves only the first
+    # reduce-scatter, the slow chain, and the last drain exposed
+    f, s, d = [1.0] * 4, [10.0] * 4, [1.0] * 4
+    assert hier_sync_makespan(f, s, d, overlap=False) == pytest.approx(48)
+    assert hier_sync_makespan(f, s, d, overlap=True) == pytest.approx(42)
+
+
+def test_hier_sync_makespan_overlap_fast_dominated():
+    # fast >> slow: the fast channel is the bottleneck; the slow hops
+    # (2 units total) hide entirely under it
+    f, s, d = [10.0, 10.0], [1.0, 1.0], [10.0, 10.0]
+    assert hier_sync_makespan(f, s, d, overlap=False) == pytest.approx(42)
+    assert hier_sync_makespan(f, s, d, overlap=True) == pytest.approx(40)
+
+
+def test_hier_sync_makespan_overlap_never_slower():
+    for k in (1, 2, 3, 7):
+        f = [0.5 + 0.1 * i for i in range(k)]
+        s = [2.0 - 0.2 * i for i in range(k)]
+        d = [0.4] * k
+        serial = hier_sync_makespan(f, s, d, overlap=False)
+        piped = hier_sync_makespan(f, s, d, overlap=True)
+        assert piped <= serial + 1e-12
+        # and never better than the slow-chain + pipeline-fill bound
+        assert piped >= max(sum(s), f[0] + s[-1] + d[-1]) - 1e-12
+
+
+def test_exposed_slow_fraction_bounds():
+    f, s, d = [1.0] * 4, [10.0] * 4, [1.0] * 4
+    assert exposed_slow_fraction(f, s, d, overlap=False) == \
+        pytest.approx(1.0)
+    frac = exposed_slow_fraction(f, s, d, overlap=True)
+    assert 0.0 < frac < 1.0
+    assert exposed_slow_fraction([1.0], [0.0], [1.0], overlap=True) == 0.0
+
+
+def test_bucket_sync_times_degenerate_axes_and_compression():
+    numels = (64, 128)
+    f1, s1, d1 = bucket_sync_times(numels, nf=1, ns=4, fast_bps=1e9,
+                                   slow_bps=1e9)
+    assert f1 == [0.0, 0.0] and d1 == [0.0, 0.0]     # no fast tier
+    f2, s2, d2 = bucket_sync_times(numels, nf=4, ns=1, fast_bps=1e9,
+                                   slow_bps=1e9)
+    assert s2 == [0.0, 0.0]                          # no slow tier
+    assert all(x > 0 for x in f2) and f2 == d2
+    # int8 slow hop: 1 byte/elem -> 4x fewer slow seconds than f32
+    _, s32, _ = bucket_sync_times(numels, nf=4, ns=2, fast_bps=1e9,
+                                  slow_bps=1e9)
+    _, s8, _ = bucket_sync_times(numels, nf=4, ns=2, fast_bps=1e9,
+                                 slow_bps=1e9, slow_bytes_per_elem=1.0)
+    for a, b in zip(s8, s32):
+        assert a == pytest.approx(b / 4.0)

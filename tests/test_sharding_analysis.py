@@ -56,6 +56,158 @@ def test_hlo_analysis_collectives_multidevice():
     assert "HLO_COLL_OK" in out
 
 
+_SYNTH_HLO_HEADER = """
+HloModule synth
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+"""
+
+
+def test_slow_chain_independent_collectives():
+    """Two cross-pod all-reduces on disjoint data: depth 1, pipelinable."""
+    txt = _SYNTH_HLO_HEADER + """
+ENTRY %main (p0: f32[8], p1: f32[8]) -> (f32[8], f32[8]) {
+  %p0 = f32[8] parameter(0)
+  %p1 = f32[8] parameter(1)
+  %ar0 = f32[8] all-reduce(%p0), replica_groups={{0,2},{1,3}}, to_apply=%add
+  %ar1 = f32[8] all-reduce(%p1), replica_groups={{0,2},{1,3}}, to_apply=%add
+  ROOT %t = (f32[8], f32[8]) tuple(%ar0, %ar1)
+}
+"""
+    ch = H.slow_collective_chains(txt, chips_per_pod=2)
+    assert ch.n_slow == 2
+    assert ch.max_depth == 1 and ch.independent
+    assert ch.dependent_pairs == []
+
+
+def test_slow_chain_detects_data_dependence():
+    """A slow collective fed (transitively) by another slow collective's
+    result is a depth-2 chain — not pipelinable."""
+    txt = _SYNTH_HLO_HEADER + """
+ENTRY %main (p0: f32[8], p1: f32[8]) -> f32[8] {
+  %p0 = f32[8] parameter(0)
+  %p1 = f32[8] parameter(1)
+  %ar0 = f32[8] all-reduce(%p0), replica_groups={{0,2},{1,3}}, to_apply=%add
+  %mix = f32[8] add(%ar0, %p1)
+  ROOT %ar1 = f32[8] all-reduce(%mix), replica_groups={{0,2},{1,3}}, to_apply=%add
+}
+"""
+    ch = H.slow_collective_chains(txt, chips_per_pod=2)
+    assert ch.n_slow == 2
+    assert ch.max_depth == 2 and not ch.independent
+    assert any(a.endswith("ar0") and b.endswith("ar1")
+               for a, b in ch.dependent_pairs), ch.dependent_pairs
+
+
+def test_slow_chain_ignores_fast_collectives_and_done_halves():
+    """Intra-pod collectives are not slow nodes, and the -done half of an
+    async pair passes its cone through without counting twice — a slow
+    hop chained only through *fast* collectives stays depth 1."""
+    txt = _SYNTH_HLO_HEADER + """
+ENTRY %main (p0: f32[8]) -> f32[8] {
+  %p0 = f32[8] parameter(0)
+  %rs = f32[4] reduce-scatter(%p0), replica_groups={{0,1},{2,3}}, dimensions={0}, to_apply=%add
+  %ars = f32[4] all-reduce-start(%rs), replica_groups={{0,2},{1,3}}, to_apply=%add
+  %ard = f32[4] all-reduce-done(%ars)
+  ROOT %ag = f32[8] all-gather(%ard), replica_groups={{0,1},{2,3}}, dimensions={0}
+}
+"""
+    ch = H.slow_collective_chains(txt, chips_per_pod=2)
+    assert ch.n_slow == 1
+    assert ch.max_depth == 1 and ch.independent
+
+
+def test_slow_chain_follows_called_computations():
+    """Slow collectives inside a called computation chain with ones that
+    consume the call's result."""
+    txt = _SYNTH_HLO_HEADER + """
+%inner (q0: f32[8]) -> f32[8] {
+  %q0 = f32[8] parameter(0)
+  ROOT %arin = f32[8] all-reduce(%q0), replica_groups={{0,2},{1,3}}, to_apply=%add
+}
+
+ENTRY %main (p0: f32[8]) -> f32[8] {
+  %p0 = f32[8] parameter(0)
+  %c = f32[8] call(%p0), to_apply=%inner
+  ROOT %ar1 = f32[8] all-reduce(%c), replica_groups={{0,2},{1,3}}, to_apply=%add
+}
+"""
+    ch = H.slow_collective_chains(txt, chips_per_pod=2)
+    assert ch.n_slow == 2
+    assert ch.max_depth == 2 and not ch.independent
+
+
+def test_slow_chain_dependence_entering_called_computation():
+    """A slow collective feeding a call whose body holds another slow
+    collective is a depth-2 chain: the `parameter(i)` op inside the
+    callee must inherit the call operand's cone, not reset it."""
+    txt = _SYNTH_HLO_HEADER + """
+%inner (q0: f32[8]) -> f32[8] {
+  %q0 = f32[8] parameter(0)
+  ROOT %arin = f32[8] all-reduce(%q0), replica_groups={{0,2},{1,3}}, to_apply=%add
+}
+
+ENTRY %main (p0: f32[8]) -> f32[8] {
+  %p0 = f32[8] parameter(0)
+  %ar0 = f32[8] all-reduce(%p0), replica_groups={{0,2},{1,3}}, to_apply=%add
+  ROOT %c = f32[8] call(%ar0), to_apply=%inner
+}
+"""
+    ch = H.slow_collective_chains(txt, chips_per_pod=2)
+    assert ch.n_slow == 2
+    assert ch.max_depth == 2 and not ch.independent
+    assert any(a.endswith("ar0") and b.endswith("arin")
+               for a, b in ch.dependent_pairs), ch.dependent_pairs
+
+
+def test_slow_chain_respects_root_marker_not_print_order():
+    """The callee's result cone comes from its ROOT op even when the
+    printed op order puts another (slow-free) op last."""
+    txt = _SYNTH_HLO_HEADER + """
+%inner (q0: f32[8]) -> f32[8] {
+  %q0 = f32[8] parameter(0)
+  ROOT %arin = f32[8] all-reduce(%q0), replica_groups={{0,2},{1,3}}, to_apply=%add
+  %dead = f32[8] negate(%q0)
+}
+
+ENTRY %main (p0: f32[8]) -> f32[8] {
+  %p0 = f32[8] parameter(0)
+  %c = f32[8] call(%p0), to_apply=%inner
+  ROOT %ar1 = f32[8] all-reduce(%c), replica_groups={{0,2},{1,3}}, to_apply=%add
+}
+"""
+    ch = H.slow_collective_chains(txt, chips_per_pod=2)
+    assert ch.n_slow == 2
+    assert ch.max_depth == 2 and not ch.independent
+
+
+def test_slow_chain_while_body_counted_once():
+    """A slow collective inside a while body registers once — the
+    cone-propagation second pass must not double n_slow."""
+    txt = _SYNTH_HLO_HEADER + """
+%cond (cv: f32[8]) -> pred[] {
+  %cv = f32[8] parameter(0)
+  ROOT %lt = pred[] constant(0)
+}
+
+%body (bv: f32[8]) -> f32[8] {
+  %bv = f32[8] parameter(0)
+  ROOT %arb = f32[8] all-reduce(%bv), replica_groups={{0,2},{1,3}}, to_apply=%add
+}
+
+ENTRY %main (p0: f32[8]) -> f32[8] {
+  %p0 = f32[8] parameter(0)
+  ROOT %w = f32[8] while(%p0), condition=%cond, body=%body
+}
+"""
+    ch = H.slow_collective_chains(txt, chips_per_pod=2)
+    assert ch.n_slow == 1, ch
+
+
 def test_rules_divisibility_dropping():
     """Non-dividing dims silently stay replicated (whisper's 6 heads on a
     16-way axis)."""

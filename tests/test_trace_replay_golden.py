@@ -1,0 +1,77 @@
+"""Trace-replay regression: golden numbers per OperationMode x policy.
+
+The simulator's O(1)-drain bookkeeping (``_Running.finish_at``), cached
+idle-slice sums, and reconfiguration paths are pure refactor targets —
+this test pins the end-to-end replay of one fixed trace so any behavioral
+drift (as opposed to a speedup) shows up as a diff against these goldens.
+
+The numbers were produced by the current implementation on the pinned
+jax/numpy stack; the simulator is pure-Python float arithmetic, so they
+are deterministic and exact up to float tolerance.  If a PR changes them
+*intentionally* (a modeling change, not a refactor), regenerate and say
+so in the PR.
+"""
+import pytest
+
+from repro.core.simulator import simulate
+from repro.core.traces import TraceCategory, generate_trace
+
+GOLDEN = {
+    ("FM", "fifo"): dict(makespan=10837.26421867104,
+                         avg_jct=1872.2502029235643,
+                         avg_wait=3521.3905893048386,
+                         frag=0.0, util=0.8896557934142526,
+                         n_reconfigs=0, n_drains=0),
+    ("FM", "backfill"): dict(makespan=10940.805596136572,
+                             avg_jct=1849.9780332670705,
+                             avg_wait=3072.668295397557,
+                             frag=0.0, util=0.8767286709849166,
+                             n_reconfigs=0, n_drains=0),
+    ("DM", "fifo"): dict(makespan=15297.269497626332,
+                         avg_jct=1914.7769052604087,
+                         avg_wait=6179.540084837227,
+                         frag=493.9016722068024,
+                         util=0.6360196041436966,
+                         n_reconfigs=12, n_drains=9),
+    ("DM", "backfill"): dict(makespan=13005.961373381286,
+                             avg_jct=1920.5833568733121,
+                             avg_wait=4494.699267800047,
+                             frag=2552.584659606311,
+                             util=0.7530132437723299,
+                             n_reconfigs=11, n_drains=8),
+    ("SM", "fifo"): dict(makespan=11112.661617302752,
+                         avg_jct=1622.8848308179004,
+                         avg_wait=3788.0336721802314,
+                         frag=837.3283532341738,
+                         util=0.8451210263096537,
+                         n_reconfigs=0, n_drains=0),
+    ("SM", "backfill"): dict(makespan=10588.82432352852,
+                             avg_jct=1657.2080551997717,
+                             avg_wait=3211.9444299310267,
+                             frag=613.8954604205466,
+                             util=0.886929814311741,
+                             n_reconfigs=0, n_drains=0),
+}
+
+
+def _trace():
+    return generate_trace(TraceCategory("philly", "balanced", "mixed"),
+                          seed=7, double=False, max_size=4)
+
+
+@pytest.mark.parametrize("mode,policy", sorted(GOLDEN))
+def test_trace_replay_matches_golden(mode, policy):
+    jobs = _trace()
+    assert len(jobs) == 31                     # the trace itself is pinned
+    r = simulate(jobs, mode, policy=policy)
+    g = GOLDEN[(mode, policy)]
+    rel = 1e-9
+    assert r.makespan == pytest.approx(g["makespan"], rel=rel)
+    assert r.avg_jct == pytest.approx(g["avg_jct"], rel=rel)
+    assert r.avg_wait == pytest.approx(g["avg_wait"], rel=rel)
+    assert r.avg_ext_frag_delay == pytest.approx(g["frag"], rel=rel,
+                                                 abs=1e-9)
+    assert r.utilization == pytest.approx(g["util"], rel=rel)
+    assert r.n_reconfigs == g["n_reconfigs"]
+    assert r.n_drains == g["n_drains"]
+    assert r.n_jobs == len(jobs)

@@ -51,10 +51,14 @@ def test_grad_accumulation_invariance(small_model):
     l4, g4 = jax.jit(make_loss_and_grad(model, accum=4))(params, batch)
     np.testing.assert_allclose(float(l1), float(l4), rtol=2e-5)
     # bf16 forward + different reduction orders: tolerance reflects the
-    # grads' own magnitude (~1e-3)
+    # grads' own magnitude (~1e-3).  atol also covers the thread-pool
+    # retiling under --xla_force_host_platform_device_count=8 (the CI
+    # device matrix), which shifts f32 summation order by up to ~6e-4
+    # on 0.1% of elements; the bf16-rounding bug this test guards
+    # against produces errors well over 1e-2
     for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g4)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
-                                   rtol=2e-2, atol=2e-4)
+                                   rtol=2e-2, atol=1e-3)
 
 
 def test_grad_clipping():
