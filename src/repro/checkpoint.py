@@ -24,23 +24,18 @@ import numpy as np
 
 
 def _leaf_paths(tree) -> Dict[str, Any]:
-    flat = {}
-
-    def walk(prefix, node):
-        if isinstance(node, dict):
-            for k in sorted(node):
-                walk(f"{prefix}.{k}" if prefix else str(k), node[k])
-        elif isinstance(node, (list, tuple)):
-            for i, v in enumerate(node):
-                walk(f"{prefix}[{i}]", v)
-        else:
-            flat[prefix] = node
-    walk("", tree)
-    return flat
+    # the leaf-path grammar is the cross-format contract (restore_auto
+    # hands the same template to either format), so there is exactly one
+    # implementation: repro.ckpt.treepaths.  Imported at call time —
+    # repro.ckpt's package init imports this module, so a module-level
+    # import here would cycle.
+    from repro.ckpt.treepaths import leaf_paths
+    return leaf_paths(tree)
 
 
 def _sanitize(path: str) -> str:
-    return re.sub(r"[^A-Za-z0-9_.\[\]-]", "_", path)
+    from repro.ckpt.treepaths import sanitize
+    return sanitize(path)
 
 
 def save(ckpt_dir: str, step: int, tree, *, blocking: bool = True
@@ -70,9 +65,38 @@ def save(ckpt_dir: str, step: int, tree, *, blocking: bool = True
     if blocking:
         write()
         return None
-    t = threading.Thread(target=write, daemon=True)
+    t = _WriterThread(write)
     t.start()
     return t
+
+
+class _WriterThread(threading.Thread):
+    """Async-save writer whose ``join`` re-raises write failures.
+
+    A daemon thread that swallowed ENOSPC/EPERM would make a failed
+    checkpoint indistinguishable from a committed one — the trainer
+    would run for hours believing it is protected.  ``Trainer`` joins
+    the pending writer before each new save (and in its ``finally``), so
+    failures surface at the next checkpoint boundary at the latest.
+    Shared by both checkpoint formats (this module is upstream of
+    ``repro.ckpt``, which imports it here).
+    """
+
+    def __init__(self, fn):
+        super().__init__(daemon=True)
+        self._fn = fn
+        self.exc: Optional[BaseException] = None
+
+    def run(self):
+        try:
+            self._fn()
+        except BaseException as e:      # noqa: BLE001 — re-raised in join
+            self.exc = e
+
+    def join(self, timeout=None):
+        super().join(timeout)
+        if self.exc is not None:
+            raise self.exc
 
 
 class CorruptCheckpointError(RuntimeError):
@@ -104,6 +128,21 @@ def restore(ckpt_dir: str, template, *, shardings=None,
         want = np.dtype(meta["dtype"])
         if arr.dtype != want:     # np.save round-trips bf16 as void16
             arr = arr.view(want)
+        if (hasattr(leaf, "shape")
+                and tuple(arr.shape) != tuple(leaf.shape)):
+            # fail here with a clear error instead of deep inside the
+            # jitted step; the gathered format cannot reshard — that is
+            # what repro.ckpt's shard+manifest format is for
+            raise CorruptCheckpointError(
+                f"shape mismatch for {k}: saved {tuple(arr.shape)} vs "
+                f"template {tuple(leaf.shape)} — the legacy gathered "
+                f"format cannot reshard onto a different layout (save "
+                f"with repro.ckpt.save_sharded for that)")
+        if hasattr(leaf, "dtype") and arr.dtype != np.dtype(
+                str(leaf.dtype)):
+            raise CorruptCheckpointError(
+                f"dtype mismatch for {k}: saved {arr.dtype} vs "
+                f"template {leaf.dtype}")
         if verify:
             crc = zlib.crc32(arr.tobytes()) & 0xffffffff
             if crc != meta["crc32"]:
@@ -112,28 +151,34 @@ def restore(ckpt_dir: str, template, *, shardings=None,
         out[k] = (jax.device_put(arr, sh) if sh is not None
                   else jax.numpy.asarray(arr))
 
-    def rebuild(prefix, node):
-        if isinstance(node, dict):
-            return {k: rebuild(f"{prefix}.{k}" if prefix else str(k), v)
-                    for k, v in node.items()}
-        if isinstance(node, (list, tuple)):
-            vals = [rebuild(f"{prefix}[{i}]", v)
-                    for i, v in enumerate(node)]
-            return type(node)(vals) if not hasattr(node, "_fields") \
-                else type(node)(*vals)
-        return out[prefix]
+    from repro.ckpt.treepaths import rebuild
+    return manifest["step"], rebuild(template, out)
 
-    return manifest["step"], rebuild("", template)
+
+# committed step dirs match exactly; anything else — in-flight temp dirs
+# from the atomic rename protocol ("step_00000010.tmp-1234"), editor
+# droppings, torn copies — is skipped instead of crashing int()
+_STEP_DIR_RE = re.compile(r"^step_(\d+)$")
 
 
 def latest_step(base_dir: str) -> Optional[int]:
+    """Largest *committed* step in ``base_dir``.
+
+    A step dir counts only if its name matches ``step_<digits>`` exactly
+    AND it contains a manifest — the commit marker both checkpoint
+    formats write last.  Partially-written dirs (crash mid-save, torn
+    temp dirs awaiting their atomic rename) are ignored, never raised on:
+    a restart after a mid-checkpoint crash must resume from the previous
+    good step, not die enumerating the wreckage.
+    """
     if not os.path.isdir(base_dir):
         return None
     steps = []
     for d in os.listdir(base_dir):
-        if d.startswith("step_") and os.path.exists(
+        m = _STEP_DIR_RE.match(d)
+        if m and os.path.exists(
                 os.path.join(base_dir, d, "manifest.json")):
-            steps.append(int(d.split("_")[1]))
+            steps.append(int(m.group(1)))
     return max(steps) if steps else None
 
 

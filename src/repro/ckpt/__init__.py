@@ -1,0 +1,43 @@
+"""Elastic sharded checkpointing: per-rank shards + manifest.
+
+The subsystem behind drain-free reconfiguration: each data-parallel rank
+saves only the ZeRO-1 bucket shards (f32 masters/moments, EF residuals)
+it already holds plus the replicated small leaves, under an atomic
+temp-dir-rename commit protocol; a JSON manifest records the bucket
+layout, mesh, step and per-file checksums; and restore reshards the flat
+bucket address space onto whatever (pod, data) mesh the *restorer* runs
+— no rank ever gathers a full bucket on either side.
+
+Public API:
+
+- :func:`save_sharded` / :func:`restore_sharded` — the sharded format;
+- :func:`restore_auto` — format dispatch (legacy per-leaf dirs keep
+  restoring);
+- :class:`ShardedCheckpoint` — range-level reader (reshard arithmetic);
+- :func:`latest_step` / :func:`step_dir` — step-dir bookkeeping, shared
+  with (and crash-safe against) the legacy format;
+- restore policies :data:`EXACT` / :data:`PAD_FLAT` / :data:`ZERO`.
+
+The legacy gathered per-leaf format lives on in :mod:`repro.checkpoint`
+for small replicated states and old checkpoints.
+"""
+from repro.checkpoint import (CorruptCheckpointError, latest_step,
+                              step_dir)
+from repro.ckpt.manifest import (FORMAT, MANIFEST, VERSION, LeafEntry,
+                                 Manifest, ManifestError, ShardFile,
+                                 bucket_live_sizes, is_sharded_dir,
+                                 read_manifest)
+from repro.ckpt.sharded import (EXACT, PAD_FLAT, ZERO, ShardedCheckpoint,
+                                restore_auto, restore_sharded,
+                                save_sharded)
+from repro.ckpt.treepaths import leaf_paths, rebuild, sanitize
+
+__all__ = [
+    "CorruptCheckpointError", "latest_step", "step_dir",
+    "FORMAT", "MANIFEST", "VERSION", "LeafEntry", "Manifest",
+    "ManifestError", "ShardFile", "bucket_live_sizes", "is_sharded_dir",
+    "read_manifest",
+    "EXACT", "PAD_FLAT", "ZERO", "ShardedCheckpoint", "restore_auto",
+    "restore_sharded", "save_sharded",
+    "leaf_paths", "rebuild", "sanitize",
+]

@@ -1,0 +1,390 @@
+"""Sharded checkpoint save/restore with drain-free reshard-on-restore.
+
+Save side: every leaf whose ``jax.Array`` sharding is not fully
+replicated is written as one ``.npy`` *per distinct shard* — each rank
+persists only the slice it already holds (for a ZeRO-1 state that is the
+1/F bucket shard; no rank ever gathers a full bucket).  Fully-replicated
+leaves (params, the step counter) are written once.  Files land in a
+temp directory (``<dir>.tmp-<pid>``), the manifest is written last, and
+the directory is atomically renamed into place — a crash at any point
+leaves either the previous committed step or an ignorable torn dir.
+
+Restore side: the target mesh and shardings are the *restorer's*; the
+saved mesh shape is irrelevant.  Each target shard is assembled from the
+intersecting saved shard boxes (``jax.make_array_from_callback`` — every
+device materializes only its own slice).  Restoring onto a different
+(pod, data) factorization is therefore pure offset arithmetic over the
+manifest's index boxes.  When a flat bucket's *padded* size differs
+(bucket alignment follows the fast-axis size), the ``pad_flat`` policy
+copies the common prefix and zero-fills the tail — exact, because
+everything past the layout's live prefix is zeros on both sides.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import threading
+import zlib
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import ml_dtypes  # noqa: F401  (registers bfloat16 etc. with numpy)
+import numpy as np
+
+from repro.checkpoint import CorruptCheckpointError, _WriterThread
+from repro.ckpt import manifest as mf
+from repro.ckpt.treepaths import leaf_paths, rebuild, sanitize
+
+# restore policies (per leaf, via a same-structure policy tree):
+EXACT = "exact"          # shapes must match the manifest (default)
+PAD_FLAT = "pad_flat"    # 1-D flat resize: copy common prefix, zero tail
+ZERO = "zero"            # shape mismatch / missing leaf -> fresh zeros
+
+
+def _norm_index(index, shape) -> Tuple[Tuple[int, int], ...]:
+    """Normalize a tuple of slices into per-dim (start, stop)."""
+    out = []
+    for sl, dim in zip(index, shape):
+        start, stop, step = sl.indices(dim)
+        assert step == 1, f"strided shard index {sl}"
+        out.append((start, stop))
+    # scalar leaves have an empty index
+    return tuple(out)
+
+
+def _box_shape(box) -> Tuple[int, ...]:
+    return tuple(b - a for a, b in box)
+
+
+def save_sharded(ckpt_dir: str, step: int, tree, *, layout=None,
+                 mesh=None, blocking: bool = True
+                 ) -> Optional[threading.Thread]:
+    """Save ``tree`` in the sharded per-rank format.
+
+    ``layout`` (a ``bucketing.BucketLayout``) is recorded in the manifest
+    for reshard bookkeeping; ``mesh`` records provenance.  With
+    ``blocking=False`` the device->host copies happen synchronously but
+    file writes run on the returned daemon thread (join it before the
+    next save).
+
+    Single-process note: every addressable shard is written by this
+    process; in a true multi-host deployment each host writes the shards
+    it owns and rank 0 writes the replicated leaves + manifest — the
+    format (per-shard files keyed by global index boxes) is already
+    host-local.
+    """
+    flat = leaf_paths(tree)
+    entries: Dict[str, mf.LeafEntry] = {}
+    payload = []                               # (fname, np.ndarray)
+    for key, leaf in flat.items():
+        if leaf is None:
+            continue
+        stem = sanitize(key)
+        sharding = getattr(leaf, "sharding", None)
+        if (isinstance(leaf, jax.Array) and sharding is not None
+                and not sharding.is_fully_replicated):
+            seen: Dict[Tuple, np.ndarray] = {}
+            for s in leaf.addressable_shards:
+                box = _norm_index(s.index, leaf.shape)
+                if box not in seen:
+                    seen[box] = np.asarray(s.data)
+            vol = sum(int(np.prod(_box_shape(b))) for b in seen)
+            if vol != int(np.prod(leaf.shape)):
+                raise ValueError(
+                    f"shards of {key} cover {vol} of "
+                    f"{int(np.prod(leaf.shape))} elements — "
+                    f"non-addressable or overlapping sharding")
+            shards = []
+            for j, (box, arr) in enumerate(sorted(seen.items())):
+                fname = f"{stem}.s{j}.npy"
+                payload.append((fname, arr))
+                shards.append(mf.ShardFile(
+                    file=fname, index=box,
+                    crc32=zlib.crc32(arr.tobytes()) & 0xffffffff))
+            try:
+                spec = tuple(sharding.spec)
+            except AttributeError:
+                spec = ()
+            entries[key] = mf.LeafEntry(
+                kind="sharded", shape=tuple(leaf.shape),
+                dtype=str(leaf.dtype), shards=tuple(shards), spec=spec)
+        else:
+            arr = np.asarray(jax.device_get(leaf))
+            fname = stem + ".npy"
+            payload.append((fname, arr))
+            entries[key] = mf.LeafEntry(
+                kind="replicated", shape=tuple(arr.shape),
+                dtype=str(arr.dtype), file=fname,
+                crc32=zlib.crc32(arr.tobytes()) & 0xffffffff)
+
+    man = mf.Manifest(step=step, leaves=entries,
+                      mesh=mf.mesh_to_dict(mesh),
+                      layout=mf.layout_to_dict(layout))
+    tmp = f"{ckpt_dir}.tmp-{os.getpid()}"
+    old = f"{ckpt_dir}.old-{os.getpid()}"
+
+    def write():
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        for fname, arr in payload:
+            np.save(os.path.join(tmp, fname), arr)
+        with open(os.path.join(tmp, mf.MANIFEST), "w") as f:
+            f.write(man.to_json())               # commit marker, last
+        if os.path.exists(ckpt_dir):
+            # re-save of the same step: move the old commit ASIDE, never
+            # rmtree it pre-commit — deleting first would leave a crash
+            # window in which the only committed checkpoint is destroyed
+            # irrecoverably.  A crash between the two renames still
+            # hides this step from latest_step (the .old-* name fails
+            # its regex, resume falls back to an earlier step), but the
+            # bytes survive on disk for manual recovery.
+            if os.path.exists(old):
+                shutil.rmtree(old)
+            os.rename(ckpt_dir, old)
+        os.rename(tmp, ckpt_dir)                 # atomic commit
+        shutil.rmtree(old, ignore_errors=True)
+
+    if blocking:
+        write()
+        return None
+    t = _WriterThread(write)
+    t.start()
+    return t
+
+
+class ShardedCheckpoint:
+    """Reader for one committed sharded checkpoint directory."""
+
+    def __init__(self, ckpt_dir: str, *, verify: bool = True):
+        self.dir = ckpt_dir
+        self.manifest = mf.read_manifest(ckpt_dir)
+        self.verify = verify
+        # restore walks target shards in order, so consecutive reads
+        # usually hit the same saved file: keep exactly one file hot (a
+        # full cache would hold the whole state in host RAM, the thing
+        # the sharded format exists to avoid) and remember which files
+        # already passed their checksum so CRC work happens once per
+        # file, not once per intersecting target shard
+        self._hot: Tuple[Optional[str], Optional[np.ndarray]] = (None,
+                                                                 None)
+        self._verified: set = set()
+
+    @property
+    def step(self) -> int:
+        return self.manifest.step
+
+    def _load_file(self, fname: str, crc: Optional[int],
+                   dtype: np.dtype) -> np.ndarray:
+        if self._hot[0] == fname:
+            return self._hot[1]
+        arr = np.load(os.path.join(self.dir, fname))
+        if arr.dtype != dtype:        # np.save round-trips bf16 as void16
+            arr = arr.view(dtype)
+        if (self.verify and crc is not None
+                and fname not in self._verified):
+            got = zlib.crc32(arr.tobytes()) & 0xffffffff
+            if got != crc:
+                raise CorruptCheckpointError(
+                    f"checksum mismatch for {fname}")
+            self._verified.add(fname)
+        self._hot = (fname, arr)
+        return arr
+
+    def read_box(self, path: str, box) -> np.ndarray:
+        """Assemble the global index ``box`` of leaf ``path`` from the
+        intersecting saved shard files.
+
+        Never materializes more than the requested box plus one saved
+        shard at a time — the reshard-on-restore memory guarantee.
+        Coordinates past the saved extent are zero-filled (the flat
+        bucket padding rule); entirely out-of-range boxes are all zeros.
+        """
+        entry = self.manifest.leaves[path]
+        dtype = np.dtype(entry.dtype)
+        box = tuple(box)
+        out = np.zeros(_box_shape(box), dtype=dtype)
+        # a replicated leaf is just one saved box covering the whole
+        # array — the same intersection arithmetic serves both kinds
+        shards = entry.shards or (mf.ShardFile(
+            file=entry.file, index=tuple((0, d) for d in entry.shape),
+            crc32=entry.crc32),)
+        for sf in shards:
+            inter = tuple((max(a, c), min(b, d))
+                          for (a, b), (c, d) in zip(box, sf.index))
+            if any(a >= b for a, b in inter):
+                continue
+            arr = self._load_file(sf.file, sf.crc32, dtype)
+            src = tuple(slice(a - c, b - c)
+                        for (a, b), (c, _) in zip(inter, sf.index))
+            dst = tuple(slice(a - c, b - c)
+                        for (a, b), (c, _) in zip(inter, box))
+            out[dst] = arr[src]
+        return out
+
+    def read_leaf(self, path: str) -> np.ndarray:
+        entry = self.manifest.leaves[path]
+        return self.read_box(path, tuple((0, d) for d in entry.shape))
+
+    def restore(self, template, *, shardings=None, policy=None,
+                layout=None) -> Tuple[int, Any]:
+        """Restore into ``template``'s structure; returns (step, tree).
+
+        ``shardings``: same-structure tree of ``NamedSharding``s — leaves
+        with one are assembled per-device via
+        ``jax.make_array_from_callback`` (each device reads only its own
+        box).  ``policy``: same-structure tree of
+        EXACT / PAD_FLAT / ZERO strings controlling shape-mismatch
+        behavior; default EXACT everywhere.  ``layout``: the restorer's
+        ``BucketLayout`` — validated against the manifest's recorded
+        slot placement, which PAD_FLAT correctness depends on.
+        """
+        if layout is not None and self.manifest.layout is None:
+            raise CorruptCheckpointError(
+                "layout validation requested but the checkpoint's "
+                "manifest records no bucket layout (saved with "
+                "layout=None) — cannot prove the leaf->bucket placement "
+                "matches; restore without `layout` only if you know the "
+                "placement is unchanged")
+        if layout is not None:
+            # PAD_FLAT's copy-prefix rule is only exact when the leaf ->
+            # (bucket, offset) placement is unchanged; placement is
+            # alignment-invariant but NOT bucket_bytes-invariant.  A
+            # restore with a different bucket capacity would silently
+            # scramble masters across bucket boundaries — refuse it.
+            tgt = [(s.bucket, s.offset, s.size) for s in layout.slots]
+            sav = [(int(s["bucket"]), int(s["offset"]), int(s["size"]))
+                   for s in self.manifest.layout["slots"]]
+            if tgt != sav:
+                raise CorruptCheckpointError(
+                    f"bucket layout mismatch: checkpoint was saved with "
+                    f"a different leaf->bucket placement "
+                    f"({len(sav)} slots over "
+                    f"{len(self.manifest.layout['bucket_sizes'])} "
+                    f"buckets vs {len(tgt)} slots over "
+                    f"{layout.n_buckets}) — restore with the same "
+                    f"bucket_bytes the checkpoint was trained with")
+        flat_t = leaf_paths(template)
+        flat_s = leaf_paths(shardings) if shardings is not None else {}
+        flat_p = leaf_paths(policy) if policy is not None else {}
+
+        def zeros(shape, dtype, sh):
+            # ZERO-policy leaves must honor the target sharding too: a
+            # plain jnp.zeros would materialize the full (possibly
+            # GB-scale residual) array replicated on one device —
+            # breaking the no-full-materialization guarantee on exactly
+            # the elastic-restore path it protects
+            if sh is None:
+                return jax.numpy.zeros(shape, dtype)
+            return jax.make_array_from_callback(
+                shape, sh,
+                lambda index: np.zeros(
+                    _box_shape(_norm_index(index, shape)), dtype))
+
+        out: Dict[str, Any] = {}
+        for key, leaf in flat_t.items():
+            if leaf is None:
+                out[key] = None
+                continue
+            pol = flat_p.get(key, EXACT)
+            entry = self.manifest.leaves.get(key)
+            # templates may hold raw Python scalars (save coerced them
+            # via np.asarray); np.shape/np.result_type handle both
+            want_shape = tuple(np.shape(leaf))
+            want_dtype = (str(leaf.dtype) if hasattr(leaf, "dtype")
+                          else None)
+            leaf_dtype = getattr(leaf, "dtype", None)
+            if leaf_dtype is None:
+                leaf_dtype = np.asarray(leaf).dtype
+            if entry is None:
+                if pol == ZERO:
+                    out[key] = zeros(want_shape, leaf_dtype,
+                                     flat_s.get(key))
+                    continue
+                raise CorruptCheckpointError(f"missing leaf {key}")
+            if want_dtype is not None and entry.dtype != want_dtype:
+                # a silent dtype swap would retrace the step at the
+                # checkpoint's precision, not the configured one
+                if pol == ZERO:
+                    out[key] = zeros(want_shape, leaf_dtype,
+                                     flat_s.get(key))
+                    continue
+                raise CorruptCheckpointError(
+                    f"dtype mismatch for {key}: saved {entry.dtype} vs "
+                    f"template {want_dtype}")
+            if tuple(entry.shape) != want_shape:
+                if pol == ZERO:
+                    out[key] = zeros(want_shape, leaf_dtype,
+                                     flat_s.get(key))
+                    continue
+                if pol != PAD_FLAT:
+                    raise CorruptCheckpointError(
+                        f"shape mismatch for {key}: saved "
+                        f"{tuple(entry.shape)} vs template {want_shape} "
+                        f"(policy {pol})")
+                if len(entry.shape) != 1 or len(want_shape) != 1:
+                    raise CorruptCheckpointError(
+                        f"pad_flat policy needs 1-D leaves, got "
+                        f"{entry.shape} -> {want_shape} for {key}")
+                if want_shape[0] < entry.shape[0]:
+                    # shrinking is only exact when the dropped tail is
+                    # padding: verify it is actually all zeros instead
+                    # of silently truncating live optimizer state
+                    tail = self.read_box(
+                        key, ((want_shape[0], entry.shape[0]),))
+                    if tail.any():
+                        raise CorruptCheckpointError(
+                            f"pad_flat would truncate live data of "
+                            f"{key}: saved extent {entry.shape[0]}, "
+                            f"template {want_shape[0]}, and the dropped "
+                            f"tail is not all zeros")
+            if entry.kind == "sharded":
+                # the save side proved its shards tiled the array; prove
+                # it again on the read side — a manifest that parses but
+                # lost shard entries (torn hand-edit, a multi-host save
+                # missing one host's files) would otherwise zero-fill
+                # the gap silently, with every surviving CRC passing
+                vol = sum(int(np.prod(_box_shape(s.index)))
+                          for s in entry.shards)
+                if vol != int(np.prod(entry.shape)):
+                    raise CorruptCheckpointError(
+                        f"shards of {key} cover {vol} of "
+                        f"{int(np.prod(entry.shape))} saved elements — "
+                        f"manifest lost shard entries")
+            sh = flat_s.get(key)
+            if sh is not None:
+                def cb(index, _key=key, _shape=want_shape):
+                    return self.read_box(_key, _norm_index(index, _shape))
+                out[key] = jax.make_array_from_callback(
+                    want_shape, sh, cb)
+            else:
+                box = self.read_box(key, tuple((0, d)
+                                               for d in want_shape))
+                out[key] = jax.numpy.asarray(box)
+        return self.manifest.step, rebuild(template, out)
+
+
+def restore_sharded(ckpt_dir: str, template, *, shardings=None,
+                    policy=None, layout=None, verify: bool = True
+                    ) -> Tuple[int, Any]:
+    return ShardedCheckpoint(ckpt_dir, verify=verify).restore(
+        template, shardings=shardings, policy=policy, layout=layout)
+
+
+def restore_auto(ckpt_dir: str, template, *, shardings=None, policy=None,
+                 layout=None, verify: bool = True) -> Tuple[int, Any]:
+    """Dispatch on the on-disk format: sharded manifest or legacy
+    per-leaf (``repro.checkpoint``) — old checkpoints keep restoring.
+
+    The legacy format cannot apply ``policy`` (it has no reshard
+    arithmetic); its restore instead validates saved-vs-template shapes
+    and fails with a clear error on mismatch, so a re-factorized resume
+    from a legacy dir dies loudly rather than deep inside the jitted
+    step."""
+    if mf.is_sharded_dir(ckpt_dir):
+        return restore_sharded(ckpt_dir, template, shardings=shardings,
+                               policy=policy, layout=layout,
+                               verify=verify)
+    from repro import checkpoint as legacy
+    return legacy.restore(ckpt_dir, template, shardings=shardings,
+                          verify=verify)

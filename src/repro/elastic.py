@@ -66,22 +66,50 @@ class StragglerDetector:
 
 
 @dataclasses.dataclass(frozen=True)
+class CheckpointHandoff:
+    """The state handoff a remesh rides on: which committed checkpoint
+    the re-meshed job restores from, and how.
+
+    ``sharded`` names the per-rank shard + manifest format
+    (:mod:`repro.ckpt`): each new rank reads only its own slices of the
+    flat bucket address space, so the restore is drain-free — no rank
+    ever gathers a full optimizer bucket while the job reconfigures.
+    """
+
+    base_dir: str
+    step: int
+    step_dir: str
+    sharded: bool
+
+
+@dataclasses.dataclass(frozen=True)
 class RemeshPlan:
     surviving: Tuple[TpuLeaf, ...]
     mesh_shape: Tuple[int, ...]
     axis_names: Tuple[str, ...]
     dropped_hosts: Tuple[Tuple[int, int], ...]
+    # the checkpoint the re-meshed job resumes from (None when the plan
+    # was made without a checkpoint directory — pre-PR-4 callers)
+    handoff: Optional[CheckpointHandoff] = None
 
 
 def plan_elastic_remesh(leaves: Sequence[TpuLeaf],
                         failed_hosts: Sequence[Tuple[int, int]],
-                        *, model_parallel: int
+                        *, model_parallel: int,
+                        ckpt_base_dir: Optional[str] = None
                         ) -> RemeshPlan:
     """Shrink the data axis to the largest size the survivors support.
 
     Keeps 'model' intact (parameter shards must stay complete) and drops
     whole data-parallel groups containing failed hosts — the standard
     elastic-DP policy.
+
+    ``ckpt_base_dir`` names the checkpoint handoff: the plan then
+    carries the latest *committed* step the re-meshed job restores from
+    (torn/in-flight step dirs are never selected).  A remesh without any
+    committed checkpoint is refused — reconfiguring a job whose state
+    cannot be recovered silently restarts it from scratch, which is
+    exactly the failure mode drain-free reconfiguration exists to avoid.
     """
     failed = set(failed_hosts)
     surviving = [l for l in leaves if (l.pod, l.host) not in failed]
@@ -93,5 +121,18 @@ def plan_elastic_remesh(leaves: Sequence[TpuLeaf],
     while data > 1 and (n % (data * model_parallel)):
         data -= 1
     used = surviving[:data * model_parallel]
+    handoff = None
+    if ckpt_base_dir is not None:
+        from repro import ckpt as ckpt_lib
+        step = ckpt_lib.latest_step(ckpt_base_dir)
+        if step is None:
+            raise RuntimeError(
+                f"remesh requested with checkpoint handoff, but "
+                f"{ckpt_base_dir!r} holds no committed checkpoint")
+        sdir = ckpt_lib.step_dir(ckpt_base_dir, step)
+        handoff = CheckpointHandoff(
+            base_dir=ckpt_base_dir, step=step, step_dir=sdir,
+            sharded=ckpt_lib.is_sharded_dir(sdir))
     return RemeshPlan(tuple(used), (data, model_parallel),
-                      ("data", "model"), tuple(sorted(failed)))
+                      ("data", "model"), tuple(sorted(failed)),
+                      handoff=handoff)

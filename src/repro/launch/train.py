@@ -50,6 +50,21 @@ def main():
                     help="carry int8 quantization residuals across steps "
                          "(requires --slow-compress-bits 8 and a "
                          "hier_bucketed* mode)")
+    ap.add_argument("--deterministic-reduce", action="store_true",
+                    help="mesh-factorization-invariant gradient reduce "
+                         "(hier_bucketed* modes): bitwise-identical "
+                         "training across (pod, data) factorizations, so "
+                         "sharded checkpoints reshard-restore exactly "
+                         "onto a repacked mesh")
+    ap.add_argument("--resume", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="resume from the latest committed checkpoint in "
+                         "--ckpt-dir (--no-resume starts from scratch)")
+    ap.add_argument("--save-sharded", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="write per-rank shard + manifest checkpoints "
+                         "(repro.ckpt); --no-save-sharded keeps the "
+                         "legacy gathered per-leaf format")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -78,11 +93,13 @@ def main():
                       bucket_bytes=args.bucket_mb << 20,
                       slow_compress_bits=args.slow_compress_bits,
                       overlap=args.overlap,
-                      slow_error_feedback=args.error_feedback),
+                      slow_error_feedback=args.error_feedback,
+                      deterministic_reduce=args.deterministic_reduce,
+                      save_sharded=args.save_sharded),
         DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
                    global_batch=args.batch),
         rules=rules)
-    out = trainer.run(resume=True)
+    out = trainer.run(resume=args.resume)
     for h in out["history"]:
         print(f"step {h['step']:4d}  loss {h['loss']:.4f}  "
               f"{h['sec_per_step']*1e3:.0f} ms")

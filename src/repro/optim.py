@@ -83,7 +83,12 @@ def init_bucketed(cfg: AdamWConfig, params, layout) -> BucketedOptState:
     """
     from repro.collectives.bucketing import flatten_to_buckets
     assert cfg.use_master, "bucketed ZeRO-1 state requires f32 masters"
-    master = flatten_to_buckets(layout, params)
+    # explicit copy: for an f32 leaf that exactly fills a bucket,
+    # flatten_to_buckets' reshape+astype is a no-op alias of the param
+    # buffer — donating params and masters to the jitted step would then
+    # donate the same buffer twice (same guard as optim.init)
+    master = tuple(jnp.array(b, dtype=jnp.float32, copy=True)
+                   for b in flatten_to_buckets(layout, params))
     return BucketedOptState(
         step=jnp.zeros((), jnp.int32),
         mu=tuple(jnp.zeros_like(b) for b in master),

@@ -40,10 +40,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro import checkpoint as ckpt_lib
+from repro import checkpoint as legacy_ckpt
+from repro import ckpt as ckpt_lib
 from repro import optim
 from repro import parallel as PX
 from repro.collectives import bucketing
+from repro.collectives import deterministic as det
 from repro.collectives.compression import compressed_psum_mean
 from repro.collectives.hierarchical import hier_all_reduce_mean
 from repro.data import DataConfig, Prefetcher, SyntheticCorpus
@@ -124,7 +126,8 @@ def make_loss_and_grad(model, *, accum: int):
 
 
 def make_bucket_layout(params_or_shapes, mesh=None, *,
-                       bucket_bytes: int = bucketing.DEFAULT_BUCKET_BYTES
+                       bucket_bytes: int = bucketing.DEFAULT_BUCKET_BYTES,
+                       deterministic: bool = False
                        ) -> bucketing.BucketLayout:
     """The bucket layout the bucketed train modes derive for this mesh.
 
@@ -132,9 +135,17 @@ def make_bucket_layout(params_or_shapes, mesh=None, *,
     bucket evenly; passing the same (tree, mesh, bucket_bytes) the step
     sees — concrete params, ``jax.eval_shape`` output, either works —
     yields the exact layout, which is what ``optim.init_bucketed`` needs.
+
+    ``deterministic=True`` (the ``deterministic_reduce`` train modes)
+    aligns instead to ``lcm(fast, DETERMINISTIC_ALIGN)``, making the
+    padded bucket sizes — and therefore every checkpointed flat array
+    shape — identical across mesh factorizations whose fast size divides
+    the constant.  That shape invariance is what lets a sharded
+    checkpoint reshard *exactly* onto a re-factorized mesh.
     """
     fast_axis, _ = grad_sync_axes(mesh)
-    align = mesh.shape[fast_axis] if (mesh is not None and fast_axis) else 1
+    fast = mesh.shape[fast_axis] if (mesh is not None and fast_axis) else 1
+    align = det.det_align(fast) if deterministic else fast
     return bucketing.plan_buckets(params_or_shapes,
                                   bucket_bytes=bucket_bytes, align=align)
 
@@ -146,7 +157,8 @@ def _residual_spec(fast_axis, slow_axis) -> P:
 
 
 def init_slow_residuals(params_or_shapes, mesh=None, *,
-                        bucket_bytes: int = bucketing.DEFAULT_BUCKET_BYTES
+                        bucket_bytes: int = bucketing.DEFAULT_BUCKET_BYTES,
+                        deterministic: bool = False
                         ) -> Tuple[jax.Array, ...]:
     """Zero error-feedback residuals for ``slow_error_feedback=True``.
 
@@ -154,13 +166,48 @@ def init_slow_residuals(params_or_shapes, mesh=None, *,
     Global size is ``S * bucket_size`` (S = slow-axis size): sharded over
     (slow, fast), each rank holds a residual the shape of its fast-axis
     reduce-scattered bucket shard.
+
+    With ``deterministic=True`` each rank quantizes its *own full-bucket
+    contribution* instead of a hierarchical shard, so the global size is
+    ``R * bucket_size`` (R = total sync ranks) — invariant under mesh
+    re-factorization, which is what lets the residuals reshard exactly
+    on an elastic restore (the hierarchical variant's shard assignment
+    follows the pod structure and cannot).
     """
     layout = make_bucket_layout(params_or_shapes, mesh,
-                                bucket_bytes=bucket_bytes)
-    _, slow_axis = grad_sync_axes(mesh)
+                                bucket_bytes=bucket_bytes,
+                                deterministic=deterministic)
+    fast_axis, slow_axis = grad_sync_axes(mesh)
     ns = mesh.shape[slow_axis] if (mesh is not None and slow_axis) else 1
-    return tuple(jnp.zeros((ns * c,), jnp.float32)
+    nf = mesh.shape[fast_axis] if (mesh is not None and fast_axis) else 1
+    n = ns * nf if deterministic else ns
+    return tuple(jnp.zeros((n * c,), jnp.float32)
                  for c in layout.bucket_sizes)
+
+
+def init_sharded_zero1(ocfg: optim.AdamWConfig, params, layout, mesh):
+    """Build the ZeRO-1 opt state *already sharded* over the fast axis.
+
+    Returns ``(BucketedOptState, shardings)`` where ``shardings`` is the
+    matching tree of ``NamedSharding``s (None off-mesh).  Each rank
+    materializes only its 1/F slice — a device_put after an unsharded
+    init would transiently hold 3x full-model f32 on one device, the
+    exact peak ZeRO-1 exists to avoid.  The single construction the
+    trainer, the checkpoint bench and the reshard tests all share, so
+    the state/sharding shapes cannot drift apart.
+    """
+    fast_axis, _ = grad_sync_axes(mesh)
+    if mesh is None or not fast_axis:
+        return optim.init_bucketed(ocfg, params, layout), None
+    bshard = NamedSharding(mesh, P(fast_axis))
+    shardings = optim.BucketedOptState(
+        step=NamedSharding(mesh, P()),
+        mu=(bshard,) * layout.n_buckets,
+        nu=(bshard,) * layout.n_buckets,
+        master=(bshard,) * layout.n_buckets)
+    init_fn = jax.jit(lambda p: optim.init_bucketed(ocfg, p, layout),
+                      out_shardings=shardings)
+    return init_fn(params), shardings
 
 
 # logical axes that shard *parameters* (vs batch/sequence activations) —
@@ -188,7 +235,8 @@ def _make_manual_sync_step(model, ocfg: optim.AdamWConfig, *, accum: int,
                            rules: Optional[MeshRules], mode: str,
                            bucket_bytes: int, slow_compress_bits: int,
                            overlap: bool = False,
-                           slow_error_feedback: bool = False):
+                           slow_error_feedback: bool = False,
+                           deterministic_reduce: bool = False):
     """The fully-manual (shard_map over pod+data) gradient-sync steps.
 
     With no mesh (or a 1-device one) every collective degenerates to the
@@ -199,6 +247,12 @@ def _make_manual_sync_step(model, ocfg: optim.AdamWConfig, *, accum: int,
     bitwise-identical results — see ``hier_reduce_bucket_shards``).
     ``slow_error_feedback`` carries int8 quantization residuals across
     steps; the step's opt-state argument then is an :class:`EFState`.
+    ``deterministic_reduce`` swaps the hierarchical reduce for the
+    mesh-factorization-invariant gather + fixed-tree fold
+    (:mod:`repro.collectives.deterministic`): losses, grad norms and
+    updates are then bitwise-identical across every (pod, data)
+    factorization of the same rank count — the property the sharded
+    checkpoint's reshard-on-restore acceptance test verifies.
     """
     _check_manual_sync_rules(rules)
     mesh = rules.mesh if rules is not None else None
@@ -212,13 +266,19 @@ def _make_manual_sync_step(model, ocfg: optim.AdamWConfig, *, accum: int,
         sync_axes = ()
         fast_axis = slow_axis = None
     ef = slow_error_feedback
+    dt = deterministic_reduce
     lg = make_loss_and_grad(model, accum=accum)
 
     def mean_loss(loss):
-        return PX.psum(loss, sync_axes) / n_sync if sync_axes else loss
+        if not sync_axes:
+            return loss
+        if dt:
+            return det.det_mean(loss, sync_axes)
+        return PX.psum(loss, sync_axes) / n_sync
 
     def layout_for(params):
-        return make_bucket_layout(params, mesh, bucket_bytes=bucket_bytes)
+        return make_bucket_layout(params, mesh, bucket_bytes=bucket_bytes,
+                                  deterministic=dt)
 
     def hier_rank(params, batch):
         loss, grads = lg(params, batch)
@@ -246,15 +306,32 @@ def _make_manual_sync_step(model, ocfg: optim.AdamWConfig, *, accum: int,
             compress_bits=slow_compress_bits, overlap=overlap)
         return shards, ()
 
+    def det_reduce(gbuckets, residuals):
+        """Deterministic reduce -> (full buckets, gnorm, new_residuals).
+
+        Every rank holds the full meaned buckets; the grad norm is pure
+        local arithmetic on them (no collective), so both are bitwise
+        mesh-factorization-invariant.
+        """
+        full, new_res = det.det_reduce_bucket_full(
+            gbuckets, sync_axes=sync_axes,
+            compress_bits=slow_compress_bits,
+            residuals=residuals if ef else None)
+        return full, det.det_global_norm(full), new_res
+
     def bucketed_rank(params, batch, residuals):
         layout = layout_for(params)
         blg = bucketing.make_bucket_loss_and_grad(model, layout,
                                                   accum=accum)
         loss, gbuckets = blg(bucketing.flatten_to_buckets(layout, params),
                              batch)
-        shards, new_res = reduce_buckets(gbuckets, residuals)
-        gnorm = bucketing.shard_global_norm(shards, fast_axis)
-        full = bucketing.all_gather_buckets(shards, fast_axis=fast_axis)
+        if dt:
+            full, gnorm, new_res = det_reduce(gbuckets, residuals)
+        else:
+            shards, new_res = reduce_buckets(gbuckets, residuals)
+            gnorm = bucketing.shard_global_norm(shards, fast_axis)
+            full = bucketing.all_gather_buckets(shards,
+                                                fast_axis=fast_axis)
         grads = bucketing.unflatten_from_buckets(layout, full,
                                                  dtype=jnp.float32)
         return mean_loss(loss), grads, gnorm, new_res
@@ -272,8 +349,12 @@ def _make_manual_sync_step(model, ocfg: optim.AdamWConfig, *, accum: int,
         # gather per step (updated params) instead of two
         loss, gbuckets = blg(bucketing.flatten_to_buckets(layout, params),
                              batch)
-        shards, new_res = reduce_buckets(gbuckets, residuals)
-        gnorm = bucketing.shard_global_norm(shards, fast_axis)
+        if dt:
+            full, gnorm, new_res = det_reduce(gbuckets, residuals)
+            shards = det.det_fast_shards(full, fast_axis)
+        else:
+            shards, new_res = reduce_buckets(gbuckets, residuals)
+            gnorm = bucketing.shard_global_norm(shards, fast_axis)
         new_state, om = optim.apply_flat(ocfg, shards, opt_state,
                                          gnorm=gnorm)
         new_pb = bucketing.all_gather_buckets(new_state.master,
@@ -357,7 +438,8 @@ def make_train_step(model, ocfg: optim.AdamWConfig, *, accum: int = 1,
                     bucket_bytes: int = bucketing.DEFAULT_BUCKET_BYTES,
                     slow_compress_bits: int = 0,
                     overlap: bool = False,
-                    slow_error_feedback: bool = False):
+                    slow_error_feedback: bool = False,
+                    deterministic_reduce: bool = False):
     """Returns step(params, opt_state, batch) -> (params, opt, metrics).
 
     ``overlap=True`` (bucketed modes only) software-pipelines the
@@ -370,26 +452,44 @@ def make_train_step(model, ocfg: optim.AdamWConfig, *, accum: int = 1,
     residual across steps.  The step then takes/returns an
     :class:`EFState` wrapping the optimizer state (build the residuals
     with :func:`init_slow_residuals`).
+
+    ``deterministic_reduce=True`` (bucketed modes) replaces the
+    hierarchical schedule with the mesh-factorization-invariant gather +
+    fixed-tree fold: the whole step is then bitwise-identical across
+    (pod, data) factorizations of the same rank count, so a sharded
+    checkpoint reshard-restored onto a repacked mesh continues the exact
+    loss curve.  Bandwidth-heavier than the hierarchical schedule (the
+    gather moves every rank's contribution) — the
+    verification/elasticity schedule, not the throughput one.  Mutually
+    exclusive with ``overlap`` (there is no two-tier pipeline to
+    overlap); composes with ``slow_compress_bits``/``slow_error_feedback``
+    (residuals from ``init_slow_residuals(..., deterministic=True)``).
     """
     if cross_pod_mode not in CROSS_POD_MODES:
         raise ValueError(f"unknown cross_pod_mode {cross_pod_mode!r}; "
                          f"known: {CROSS_POD_MODES}")
-    if ((overlap or slow_error_feedback)
+    if ((overlap or slow_error_feedback or deterministic_reduce)
             and cross_pod_mode not in BUCKETED_SYNC_MODES):
         raise ValueError(
-            f"overlap/slow_error_feedback apply to the bucketed sync "
-            f"modes {BUCKETED_SYNC_MODES}, not {cross_pod_mode!r}")
+            f"overlap/slow_error_feedback/deterministic_reduce apply to "
+            f"the bucketed sync modes {BUCKETED_SYNC_MODES}, not "
+            f"{cross_pod_mode!r}")
     if slow_error_feedback and slow_compress_bits != 8:
         raise ValueError(
             "slow_error_feedback carries int8 quantization residuals; "
             f"it requires slow_compress_bits=8 (got {slow_compress_bits})")
+    if deterministic_reduce and overlap:
+        raise ValueError(
+            "deterministic_reduce has no two-tier pipeline to overlap; "
+            "pick one of overlap / deterministic_reduce")
     mesh = rules.mesh if rules is not None else None
     if cross_pod_mode in MANUAL_SYNC_MODES:
         return _make_manual_sync_step(
             model, ocfg, accum=accum, rules=rules, mode=cross_pod_mode,
             bucket_bytes=bucket_bytes,
             slow_compress_bits=slow_compress_bits, overlap=overlap,
-            slow_error_feedback=slow_error_feedback)
+            slow_error_feedback=slow_error_feedback,
+            deterministic_reduce=deterministic_reduce)
     lg = make_loss_and_grad(model, accum=accum)
     has_pod = mesh is not None and "pod" in mesh.axis_names
 
@@ -435,13 +535,15 @@ def make_jitted_train_step(model, ocfg, *, accum, rules,
                            batch_sharding=None, cross_pod_mode="xla",
                            bucket_bytes=bucketing.DEFAULT_BUCKET_BYTES,
                            slow_compress_bits=0, overlap=False,
-                           slow_error_feedback=False):
+                           slow_error_feedback=False,
+                           deterministic_reduce=False):
     step = make_train_step(model, ocfg, accum=accum, rules=rules,
                            cross_pod_mode=cross_pod_mode,
                            bucket_bytes=bucket_bytes,
                            slow_compress_bits=slow_compress_bits,
                            overlap=overlap,
-                           slow_error_feedback=slow_error_feedback)
+                           slow_error_feedback=slow_error_feedback,
+                           deterministic_reduce=deterministic_reduce)
 
     def wrapped(params, opt_state, batch):
         with use_rules(rules):
@@ -473,6 +575,10 @@ class TrainerConfig:
     slow_compress_bits: int = 0
     overlap: bool = False
     slow_error_feedback: bool = False
+    deterministic_reduce: bool = False
+    # sharded (per-rank shard + manifest) checkpoint format; False falls
+    # back to the legacy gathered per-leaf format (repro.checkpoint)
+    save_sharded: bool = True
 
 
 class Trainer:
@@ -495,13 +601,15 @@ class Trainer:
             bucket_bytes=tcfg.bucket_bytes,
             slow_compress_bits=tcfg.slow_compress_bits,
             overlap=tcfg.overlap,
-            slow_error_feedback=tcfg.slow_error_feedback)
+            slow_error_feedback=tcfg.slow_error_feedback,
+            deterministic_reduce=tcfg.deterministic_reduce)
         self.history: list = []
 
     def _wrap_ef(self, params, opt_state, mesh):
         """Wrap the optimizer state with sharded zero EF residuals."""
-        res = init_slow_residuals(params, mesh,
-                                  bucket_bytes=self.tcfg.bucket_bytes)
+        res = init_slow_residuals(
+            params, mesh, bucket_bytes=self.tcfg.bucket_bytes,
+            deterministic=self.tcfg.deterministic_reduce)
         fast_axis, slow_axis = grad_sync_axes(mesh)
         if mesh is not None and (fast_axis or slow_axis):
             rshard = NamedSharding(mesh,
@@ -515,29 +623,15 @@ class Trainer:
     def _init_state(self, seed: int = 0):
         params = self.model.init(jax.random.key(seed))
         self._opt_shardings = None
+        self._layout = None
         mesh = self.rules.mesh if self.rules is not None else None
         if self.tcfg.cross_pod_mode == "hier_bucketed_zero1":
-            layout = make_bucket_layout(params, mesh,
-                                        bucket_bytes=self.tcfg.bucket_bytes)
-            fast_axis, _ = grad_sync_axes(mesh)
-            if mesh is not None and fast_axis:
-                # build the flat state *already sharded* over the fast
-                # axis — each rank materializes only its 1/F slice (a
-                # device_put after an unsharded init would transiently
-                # hold 3x full-model f32 on one device, the exact peak
-                # ZeRO-1 exists to avoid)
-                bshard = NamedSharding(mesh, P(fast_axis))
-                self._opt_shardings = optim.BucketedOptState(
-                    step=NamedSharding(mesh, P()),
-                    mu=(bshard,) * layout.n_buckets,
-                    nu=(bshard,) * layout.n_buckets,
-                    master=(bshard,) * layout.n_buckets)
-                init_fn = jax.jit(
-                    lambda p: optim.init_bucketed(self.ocfg, p, layout),
-                    out_shardings=self._opt_shardings)
-                opt_state = init_fn(params)
-            else:
-                opt_state = optim.init_bucketed(self.ocfg, params, layout)
+            layout = make_bucket_layout(
+                params, mesh, bucket_bytes=self.tcfg.bucket_bytes,
+                deterministic=self.tcfg.deterministic_reduce)
+            self._layout = layout
+            opt_state, self._opt_shardings = init_sharded_zero1(
+                self.ocfg, params, layout, mesh)
         else:
             opt_state = optim.init(self.ocfg, params)
         if self.tcfg.slow_error_feedback:
@@ -556,10 +650,41 @@ class Trainer:
                 return self._run(seed=seed, resume=resume)
         return self._run(seed=seed, resume=resume)
 
+    def _restore_policy(self, params, opt_state):
+        """Per-leaf shape-mismatch policy for reshard-on-restore.
+
+        Flat ZeRO-1 buckets (masters/moments) tolerate padded-size
+        drift between mesh factorizations (PAD_FLAT: the tail past the
+        live prefix is zeros on both sides); hierarchical EF residuals
+        whose global size follows the pod count are re-zeroed (ZERO —
+        deterministic-mode residuals are rank-count-keyed, so their
+        shapes match and restore exactly); everything else must match
+        exactly.
+        """
+        exact = functools.partial(jax.tree.map, lambda _: ckpt_lib.EXACT)
+
+        def opt_policy(o):
+            if isinstance(o, optim.BucketedOptState):
+                nb = len(o.master)
+                return optim.BucketedOptState(
+                    step=ckpt_lib.EXACT,
+                    mu=(ckpt_lib.PAD_FLAT,) * nb,
+                    nu=(ckpt_lib.PAD_FLAT,) * nb,
+                    master=(ckpt_lib.PAD_FLAT,) * nb)
+            return exact(o)
+
+        if isinstance(opt_state, EFState):
+            pol = EFState(opt_policy(opt_state.opt),
+                          (ckpt_lib.ZERO,) * len(opt_state.residuals))
+        else:
+            pol = opt_policy(opt_state)
+        return (exact(params), pol)
+
     def _run(self, *, seed: int, resume: bool) -> Dict[str, Any]:
         tcfg = self.tcfg
         start = 0
         params, opt_state = self._init_state(seed)
+        mesh = self.rules.mesh if self.rules is not None else None
         if resume:
             last = ckpt_lib.latest_step(tcfg.ckpt_dir)
             if last is not None:
@@ -568,9 +693,11 @@ class Trainer:
                 # f32 masters on every device until the first step
                 shardings = ((None, self._opt_shardings)
                              if self._opt_shardings is not None else None)
-                start, (params, opt_state) = ckpt_lib.restore(
+                start, (params, opt_state) = ckpt_lib.restore_auto(
                     ckpt_lib.step_dir(tcfg.ckpt_dir, last),
-                    (params, opt_state), shardings=shardings)
+                    (params, opt_state), shardings=shardings,
+                    policy=self._restore_policy(params, opt_state),
+                    layout=self._layout)
         corpus = SyntheticCorpus(self.data_cfg)
         prefetch = Prefetcher(corpus, start_step=start)
         pending = None
@@ -594,10 +721,16 @@ class Trainer:
                 if (step + 1) % tcfg.ckpt_every == 0:
                     if pending is not None:
                         pending.join()
-                    pending = ckpt_lib.save(
-                        ckpt_lib.step_dir(tcfg.ckpt_dir, step + 1),
-                        step + 1, (params, opt_state),
-                        blocking=not tcfg.async_ckpt)
+                    sdir = ckpt_lib.step_dir(tcfg.ckpt_dir, step + 1)
+                    if tcfg.save_sharded:
+                        pending = ckpt_lib.save_sharded(
+                            sdir, step + 1, (params, opt_state),
+                            layout=self._layout, mesh=mesh,
+                            blocking=not tcfg.async_ckpt)
+                    else:
+                        pending = legacy_ckpt.save(
+                            sdir, step + 1, (params, opt_state),
+                            blocking=not tcfg.async_ckpt)
         finally:
             if pending is not None:
                 pending.join()
