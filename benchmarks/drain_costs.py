@@ -5,6 +5,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import emit, time_fn
+from repro.core.jct_model import ReconfigCostModel, ckpt_state_bytes
 from repro.core.modes import (CKPT_LOAD_S, CKPT_SAVE_S, POD_CHURN_S,
                               RECONFIGURE_S, ReconfigPlan)
 from repro.core.job import Job
@@ -27,6 +28,13 @@ def run(seeds=(0, 1, 2)) -> dict:
     j = Job("x", "bert-base", "train", 2, 32, 1000.0)
     plan = ReconfigPlan(0, 0, j, ("a", "b"))
     out["example_drain_s"] = plan.duration
+    # the same event priced as a software-coordinated handoff (default
+    # calibration; benchmarks/elastic_bench.py replaces it with measured
+    # save/restore/recompile wallclock)
+    cm = ReconfigCostModel(mode="handoff")
+    out["example_handoff_s"] = cm.job_suspension_s(
+        ckpt_state_bytes("bert-base"), drain_s=plan.duration,
+        n_ranks_old=j.size, n_ranks_new=j.size)
     return out
 
 
@@ -36,6 +44,7 @@ def main() -> None:
     emit("drain_costs", us,
          f"reconfigure_s={o['reconfigure_s']:.0f};"
          f"2job_drain_s={o['example_drain_s']:.0f};"
+         f"2job_handoff_s={o['example_handoff_s']:.1f};"
          f"reconfigs_small={o['reconfigs_small']:.1f};"
          f"reconfigs_balanced={o['reconfigs_balanced']:.1f};"
          f"reconfigs_large={o['reconfigs_large']:.1f}")

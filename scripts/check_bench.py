@@ -1,0 +1,97 @@
+#!/usr/bin/env python
+"""Schema/acceptance gate for ``BENCH_*.json`` artifacts.
+
+CI's bench-smoke job used to only *upload* the bench JSONs — a bench
+that silently degraded (missing sections, acceptance booleans flipped
+false) still produced a green job.  This script fails the job instead:
+
+- every file passed on the command line must exist and parse as JSON;
+- known bench files must contain their required top-level keys;
+- every *boolean* found inside any ``acceptance`` object (recursively)
+  must be True.
+
+Usage: ``python scripts/check_bench.py BENCH_*.json`` (no arguments:
+checks every ``BENCH_*.json`` in the repo root, requiring at least one).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+from typing import List
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+# required top-level keys per bench artifact
+REQUIRED_KEYS = {
+    "BENCH_grad_sync.json": ("arch", "sync_hlo", "jct_model",
+                             "step_wallclock_us", "acceptance"),
+    "BENCH_ckpt.json": ("accounting", "wallclock", "acceptance"),
+    "BENCH_elastic.json": ("measurements", "cost_model", "replay",
+                           "acceptance"),
+}
+
+
+def _acceptance_failures(node, path: str, out: List[str]) -> None:
+    """Collect every False boolean under an ``acceptance`` object."""
+    if isinstance(node, dict):
+        for k, v in node.items():
+            sub = f"{path}.{k}" if path else k
+            if isinstance(v, bool):
+                if v is False:
+                    out.append(sub)
+            else:
+                _acceptance_failures(v, sub, out)
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            _acceptance_failures(v, f"{path}[{i}]", out)
+
+
+def check_file(path: str) -> List[str]:
+    """Returns a list of human-readable failures for one bench JSON."""
+    name = os.path.basename(path)
+    if not os.path.exists(path):
+        return [f"{name}: missing (bench did not write it)"]
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, ValueError) as e:
+        return [f"{name}: unreadable JSON ({e})"]
+    if not isinstance(data, dict):
+        return [f"{name}: top level is not an object"]
+    failures: List[str] = []
+    for key in REQUIRED_KEYS.get(name, ()):
+        if key not in data:
+            failures.append(f"{name}: missing required key {key!r}")
+    acc = data.get("acceptance")
+    if isinstance(acc, bool):       # degenerate "acceptance": false
+        if acc is False:
+            failures.append(f"{name}: acceptance is false")
+    elif acc is not None:
+        falses: List[str] = []
+        _acceptance_failures(acc, "acceptance", falses)
+        failures.extend(f"{name}: {p} is false" for p in falses)
+    return failures
+
+
+def main(argv: List[str]) -> int:
+    paths = argv or sorted(glob.glob(os.path.join(REPO, "BENCH_*.json")))
+    if not paths:
+        print("check_bench: no BENCH_*.json found and none given",
+              file=sys.stderr)
+        return 1
+    failures: List[str] = []
+    for p in paths:
+        failures.extend(check_file(p))
+    for f in failures:
+        print(f"FAIL {f}", file=sys.stderr)
+    if failures:
+        return 1
+    for p in paths:
+        print(f"OK {os.path.basename(p)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -41,6 +41,13 @@ class ReconfigPlan:
         per_job = CKPT_SAVE_S + CKPT_LOAD_S + POD_CHURN_S
         return RECONFIGURE_S + per_job * len(self.affected_jobs)
 
+    @property
+    def base_duration(self) -> float:
+        """The mig-manager reconfigure cycle alone — what remains of the
+        geometry change when affected jobs hand off concurrently instead
+        of serializing their save/load/churn into the drain."""
+        return RECONFIGURE_S
+
 
 PlaceResult = Union[Placement, ReconfigPlan, None]
 

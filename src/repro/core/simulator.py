@@ -28,6 +28,16 @@ from repro.core.profiles import N_COMPUTE_SLICES, PROFILES
 from repro.core.scheduler import Scheduler, WaitQueue
 
 
+@dataclasses.dataclass(frozen=True)
+class ReconfigRecord:
+    """One geometry-change event as the simulator charged it."""
+    t: float                      # when the reconfiguration started
+    kind: str                     # "reshape" | "drain" | "handoff"
+    n_affected: int               # running jobs suspended by it
+    charged_s: float              # total suspension charged across them
+    gpu: Tuple[int, int]          # (host_id, gpu_id)
+
+
 @dataclasses.dataclass
 class SimResult:
     mode: str
@@ -41,6 +51,13 @@ class SimResult:
     n_jobs: int
     jct_by_job: Dict[str, float]
     wait_by_job: Dict[str, float]
+    # drain-vs-handoff accounting (reconfig cost model; defaults keep
+    # pre-existing constructors working)
+    n_handoffs: int = 0
+    drain_cost_s: float = 0.0     # suspension charged under drains
+    handoff_cost_s: float = 0.0   # suspension charged under handoffs
+    reconfig_events: List[ReconfigRecord] = dataclasses.field(
+        default_factory=list)
 
 
 @dataclasses.dataclass
@@ -56,6 +73,8 @@ class Simulation:
                  n_hosts: int = 1, gpus_per_host: int = 2,
                  scheduler: Optional[Scheduler] = None,
                  calibrate: bool = True, ground_truth: bool = False,
+                 reconfig_cost: Optional[jct_model.ReconfigCostModel]
+                 = None,
                  seed: int = 0):
         self.jobs = {j.job_id: j for j in jobs}
         self.mode = mode
@@ -76,6 +95,12 @@ class Simulation:
         self.now = 0.0
         self.n_reconfigs = 0      # all geometry changes (C4 events)
         self.n_drains = 0         # geometry changes suspending live jobs
+        self.n_handoffs = 0       # suspensions priced as handoffs instead
+        self.drain_cost_s = 0.0
+        self.handoff_cost_s = 0.0
+        self.reconfig_records: List[ReconfigRecord] = []
+        self.reconfig_cost = (reconfig_cost if reconfig_cost is not None
+                              else jct_model.ReconfigCostModel())
         self.reconfig_pending: Dict[str, ReconfigPlan] = {}
         self.frag_since: Dict[str, float] = {}
         self.ext_frag: Dict[str, float] = {}
@@ -213,23 +238,49 @@ class Simulation:
 
     # ------------------------------------------------------ reconfig (DM)
     def _start_reconfig(self, plan: ReconfigPlan) -> None:
+        cm = self.reconfig_cost
+        handoff = cm.mode == "handoff"
         self.n_reconfigs += 1
         if plan.affected_jobs:
-            self.n_drains += 1
+            if handoff:
+                self.n_handoffs += 1
+            else:
+                self.n_drains += 1
         gpu = self.cluster.gpus[(plan.host_id, plan.gpu_id)]
         gpu.draining = True
-        # suspend affected jobs: push their finish events out by the drain
+        # suspend affected jobs: push their finish events out by what the
+        # cost model charges — the full drain duration under the
+        # incumbent model, the (calibrated, measured) sharded
+        # save + reshard-restore + recompile under the paper's handoff
+        charged_total = 0.0
         for job_id in plan.affected_jobs:
             rec = self.running.get(job_id)
             if rec is None:
                 continue
             remaining = self._remaining_until_finish(rec)
+            n_ranks = max(rec.job.size, 1)
+            charged = cm.job_suspension_s(
+                jct_model.ckpt_state_bytes(rec.job.model),
+                drain_s=plan.duration,
+                n_ranks_old=n_ranks, n_ranks_new=n_ranks)
+            charged_total += charged
             rec.finish_version += 1
-            rec.job.suspended_overhead += plan.duration
-            rec.finish_at = self.now + remaining + plan.duration
+            rec.job.suspended_overhead += charged
+            rec.finish_at = self.now + remaining + charged
             self._push(rec.finish_at, "finish",
                        (job_id, rec.finish_version))
-        self._push(self.now + plan.duration, "reconfig_done", plan)
+        if handoff:
+            self.handoff_cost_s += charged_total
+        else:
+            self.drain_cost_s += charged_total
+        kind = ("reshape" if not plan.affected_jobs
+                else "handoff" if handoff else "drain")
+        self.reconfig_records.append(ReconfigRecord(
+            t=self.now, kind=kind, n_affected=len(plan.affected_jobs),
+            charged_s=charged_total, gpu=(plan.host_id, plan.gpu_id)))
+        done_in = cm.geometry_s(base_s=plan.base_duration,
+                                drain_s=plan.duration)
+        self._push(self.now + done_in, "reconfig_done", plan)
 
     def _remaining_until_finish(self, rec: _Running) -> float:
         """Time left on the currently-live finish event of ``rec``.
@@ -271,6 +322,10 @@ class Simulation:
             n_jobs=len(done),
             jct_by_job=jcts,
             wait_by_job=waits,
+            n_handoffs=self.n_handoffs,
+            drain_cost_s=self.drain_cost_s,
+            handoff_cost_s=self.handoff_cost_s,
+            reconfig_events=list(self.reconfig_records),
         )
 
 
@@ -278,13 +333,36 @@ def simulate(jobs: List[Job], mode_name: str, *, n_hosts: int = 1,
              gpus_per_host: int = 2, policy: str = "fifo",
              backfill_depth: int = 14, calibrate: bool = True,
              ground_truth: bool = False, seed: int = 0,
-             round_robin: bool = True) -> SimResult:
+             round_robin: bool = True,
+             reconfig_mode: Optional[str] = None,
+             reconfig_cost: Optional[jct_model.ReconfigCostModel] = None
+             ) -> SimResult:
+    """Replay ``jobs`` under operation mode ``mode_name``.
+
+    ``reconfig_mode='handoff'`` prices geometry changes with the paper's
+    software-coordinated handoff instead of the drain-required cycle
+    (``reconfig_cost`` supplies a calibrated
+    :class:`~repro.core.jct_model.ReconfigCostModel`, e.g. built from
+    ``BENCH_elastic.json`` measurements; without one the default
+    calibration is used).  The cost model's own mode governs the
+    charging, so passing *both* arguments with disagreeing modes is an
+    error rather than a silently mislabeled replay.  The default (no
+    mode, no cost model) is the incumbent drain behavior, bit-identical
+    to the pre-cost-model simulator.
+    """
     import copy
     jobs = copy.deepcopy(jobs)
     kw = {"round_robin": round_robin} if mode_name == "FM" else {}
+    if reconfig_cost is None:
+        reconfig_cost = jct_model.ReconfigCostModel(
+            mode=reconfig_mode or "drain")
+    elif reconfig_mode is not None and reconfig_cost.mode != reconfig_mode:
+        raise ValueError(
+            f"reconfig_mode={reconfig_mode!r} conflicts with the given "
+            f"cost model's mode={reconfig_cost.mode!r}")
     sim = Simulation(jobs, make_mode(mode_name, **kw),
                      n_hosts=n_hosts, gpus_per_host=gpus_per_host,
                      scheduler=Scheduler(policy, depth=backfill_depth),
                      calibrate=calibrate, ground_truth=ground_truth,
-                     seed=seed)
+                     reconfig_cost=reconfig_cost, seed=seed)
     return sim.run()

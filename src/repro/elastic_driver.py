@@ -1,0 +1,421 @@
+"""End-to-end elastic preemption/repack driver.
+
+Closes the loop between the repo's two halves: the cluster simulator
+charges reconfiguration events a cost, and this driver *executes* those
+events for real on the SPMD training runtime.  A reconfiguration
+schedule (typically derived from a simulated trace's reconfig events via
+:func:`schedule_from_sim`) names, per event, the training step at which
+the job is repacked and the new (pod, data) mesh factorization.  For
+each event the driver runs the full cycle the paper's
+software-coordinated handoff describes:
+
+1. committed sharded save on the old (pod, data) mesh
+   (:func:`repro.ckpt.save_sharded` — per-rank shards + manifest,
+   atomic temp-dir-rename commit);
+2. :func:`repro.elastic.plan_elastic_remesh` with the checkpoint base
+   dir — the handoff refuses to proceed without a committed checkpoint
+   and names the step dir the re-meshed job restores from;
+3. reshard-restore onto the new factorization
+   (:func:`repro.ckpt.restore_sharded` — pure offset arithmetic, no
+   rank gathers a full bucket) + jit re-compile of the train step;
+4. continue training.
+
+With ``deterministic_reduce`` (always on here: the driver trains
+``hier_bucketed_zero1`` with the mesh-factorization-invariant reduce)
+the continued run is *bitwise identical* to an uninterrupted run — the
+PR-4 invariant, asserted at every handoff (``verify=True`` additionally
+checks the restored state equals the saved state bit-for-bit).
+
+Every phase's wallclock is measured (:class:`HandoffMeasurement`), so
+:meth:`repro.core.jct_model.ReconfigCostModel.from_measurements` can
+calibrate the simulator's handoff cost from *measured*, not assumed,
+reconfiguration time (``benchmarks/elastic_bench.py``).
+
+``mode='drain'`` executes the incumbent cycle instead — a gathered
+legacy checkpoint save and a full (non-resharding) restore — so the
+bench can price both operational models from measurements.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import statistics
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import checkpoint as legacy_ckpt
+from repro import ckpt as ckpt_lib
+from repro import optim
+from repro.core.leaves import TpuLeaf
+from repro.data import DataConfig, SyntheticCorpus
+from repro.elastic import plan_elastic_remesh
+from repro.sharding import make_rules
+from repro.train import (EFState, init_sharded_zero1, init_slow_residuals,
+                         make_bucket_layout, make_jitted_train_step)
+
+
+def factorizations(n_devices: int) -> List[Tuple[int, int]]:
+    """All (pod, data) factorizations of ``n_devices``, pod ascending."""
+    if n_devices < 1:
+        raise ValueError("need at least one device")
+    return [(p, n_devices // p) for p in range(1, n_devices + 1)
+            if n_devices % p == 0]
+
+
+@dataclasses.dataclass(frozen=True)
+class ReconfigEvent:
+    """One repack: before executing training step ``step``, hand the job
+    off to the ``mesh_shape`` (pod, data) factorization."""
+    step: int
+    mesh_shape: Tuple[int, int]
+    sim_time: float = 0.0         # when the source sim event fired
+    kind: str = "handoff"
+
+    def __post_init__(self):
+        if self.step < 1:
+            raise ValueError(
+                f"reconfig step must be >= 1 (there is nothing to hand "
+                f"off before the first step), got {self.step}")
+        if len(self.mesh_shape) != 2 or min(self.mesh_shape) < 1:
+            raise ValueError(f"bad mesh shape {self.mesh_shape!r}")
+
+
+def schedule_from_sim(result, *, n_devices: int, n_steps: int,
+                      initial_shape: Optional[Tuple[int, int]] = None,
+                      max_events: Optional[int] = None
+                      ) -> List[ReconfigEvent]:
+    """Map a :class:`~repro.core.simulator.SimResult`'s job-suspending
+    reconfiguration events onto a training run's steps.
+
+    Event times are scaled from the simulated span onto ``[1,
+    n_steps - 1]`` (order-preserving, deduplicated); target
+    factorizations cycle through ``factorizations(n_devices)``, always
+    differing from the mesh they leave.  Deterministic: the same sim
+    result yields the same schedule.
+    """
+    recs = sorted((r for r in result.reconfig_events if r.n_affected > 0),
+                  key=lambda r: r.t)
+    if max_events is not None:
+        recs = recs[:max_events]
+    if not recs or n_steps < 2:
+        return []
+    t_end = max(result.makespan, recs[-1].t, 1e-9)
+    facs = factorizations(n_devices)
+    prev = tuple(initial_shape) if initial_shape is not None else facs[0]
+    out: List[ReconfigEvent] = []
+    used = set()
+    fi = 0
+    for r in recs:
+        step = 1 + int(round(r.t / t_end * (n_steps - 2)))
+        step = min(max(step, 1), n_steps - 1)
+        while step in used and step < n_steps - 1:
+            step += 1
+        if step in used:
+            continue                      # schedule is full
+        cand = prev
+        for _ in range(len(facs)):
+            cand = facs[fi % len(facs)]
+            fi += 1
+            if cand != prev:
+                break
+        if cand == prev:
+            continue                      # single-factorization device count
+        out.append(ReconfigEvent(step=step, mesh_shape=cand,
+                                 sim_time=r.t, kind=r.kind))
+        used.add(step)
+        prev = cand
+    return out
+
+
+@dataclasses.dataclass
+class HandoffMeasurement:
+    """Measured wallclock of one executed reconfiguration cycle."""
+    step: int
+    from_shape: Tuple[int, int]
+    to_shape: Tuple[int, int]
+    mode: str                     # "handoff" | "drain"
+    save_s: float
+    restore_s: float
+    first_step_s: float           # first step on the new mesh (incl. jit)
+    setup_s: float = 0.0          # new-mesh state build (init + zero1 jit)
+    compile_s: float = 0.0        # first_step_s minus steady step time
+    # total bytes the measuring process wrote/read: on the single-host
+    # fake-device mesh one process moves EVERY rank's shards, so
+    # bytes/seconds is the storage throughput a real per-rank writer
+    # would see (ReconfigCostModel.from_measurements divides per-rank
+    # shares by that throughput to project the concurrent handoff)
+    save_bytes: int = 0
+    restore_bytes: int = 0
+    state_bytes: int = 0          # logical size of the saved state
+    verified: bool = False        # restored state == saved state bitwise
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["from_shape"] = list(self.from_shape)
+        d["to_shape"] = list(self.to_shape)
+        return d
+
+
+@dataclasses.dataclass
+class ElasticRunResult:
+    losses: List[float]
+    measurements: List[HandoffMeasurement]
+    mesh_shapes: List[Tuple[int, int]]    # factorization per step
+    params: Any
+    opt_state: Any
+    steady_step_s: float
+
+
+@dataclasses.dataclass
+class _MeshCtx:
+    shape: Tuple[int, int]
+    mesh: Any
+    layout: Any
+    params: Any
+    state: Any
+    opt_shardings: Any
+    step_fn: Any
+
+
+def _dir_bytes(path: str) -> int:
+    total = 0
+    for root, _dirs, files in os.walk(path):
+        for f in files:
+            total += os.path.getsize(os.path.join(root, f))
+    return total
+
+
+def _tree_bytes(tree) -> int:
+    return int(sum(l.size * l.dtype.itemsize
+                   for l in jax.tree.leaves(tree)
+                   if hasattr(l, "dtype")))
+
+
+def _trees_equal(a, b) -> bool:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    if len(la) != len(lb):        # a truncating zip would pass trivially
+        return False
+    return all(np.array_equal(np.asarray(jax.device_get(x)),
+                              np.asarray(jax.device_get(y)))
+               for x, y in zip(la, lb))
+
+
+class ElasticDriver:
+    """Executes a reconfiguration schedule on a real training run.
+
+    The training configuration is pinned to the elastic-capable mode:
+    ``hier_bucketed_zero1`` + ``deterministic_reduce`` (sharded f32
+    state, factorization-invariant losses), optionally with the int8
+    error-feedback slow hop.
+    """
+
+    def __init__(self, model, ocfg: optim.AdamWConfig,
+                 data_cfg: DataConfig, *, base_dir: str,
+                 bucket_bytes: int = 64 << 10, accum: int = 1,
+                 mode: str = "handoff", error_feedback: bool = False,
+                 verify: bool = True):
+        if mode not in ("handoff", "drain"):
+            raise ValueError(f"unknown driver mode {mode!r}")
+        self.model = model
+        self.ocfg = ocfg
+        self.data_cfg = data_cfg
+        self.base_dir = base_dir
+        self.bucket_bytes = bucket_bytes
+        self.accum = accum
+        self.mode = mode
+        self.ef = error_feedback
+        self.verify = verify
+
+    # ----------------------------------------------------------- setup
+    def _setup(self, shape: Tuple[int, int], seed: int) -> _MeshCtx:
+        mesh = jax.make_mesh(tuple(shape), ("pod", "data"))
+        rules = make_rules(mesh, fsdp=False)
+        params = self.model.init(jax.random.key(seed))
+        layout = make_bucket_layout(params, mesh,
+                                    bucket_bytes=self.bucket_bytes,
+                                    deterministic=True)
+        state, opt_sh = init_sharded_zero1(self.ocfg, params, layout,
+                                           mesh)
+        if self.ef:
+            rshard = NamedSharding(mesh, P(("pod", "data")))
+            res = tuple(jax.device_put(r, rshard)
+                        for r in init_slow_residuals(
+                            params, mesh, bucket_bytes=self.bucket_bytes,
+                            deterministic=True))
+            state = EFState(state, res)
+            opt_sh = EFState(opt_sh, (rshard,) * layout.n_buckets)
+        step_fn = make_jitted_train_step(
+            self.model, self.ocfg, accum=self.accum, rules=rules,
+            cross_pod_mode="hier_bucketed_zero1",
+            bucket_bytes=self.bucket_bytes,
+            slow_compress_bits=8 if self.ef else 0,
+            slow_error_feedback=self.ef, deterministic_reduce=True)
+        return _MeshCtx(tuple(shape), mesh, layout, params, state,
+                        opt_sh, step_fn)
+
+    @staticmethod
+    def _leaves(shape: Tuple[int, int]) -> List[TpuLeaf]:
+        return [TpuLeaf(pod=p, host=d, chip=0)
+                for p in range(shape[0]) for d in range(shape[1])]
+
+    # --------------------------------------------------------- handoff
+    def _handoff(self, ctx: _MeshCtx, event: ReconfigEvent, step: int,
+                 seed: int) -> Tuple[_MeshCtx, HandoffMeasurement]:
+        sdir = ckpt_lib.step_dir(self.base_dir, step)
+        state_bytes = _tree_bytes((ctx.params, ctx.state))
+
+        # the handoff below restores the *latest committed* step in
+        # base_dir; a stale newer checkpoint (a previous run's leftovers)
+        # would silently win over the save we are about to make
+        stale = ckpt_lib.latest_step(self.base_dir)
+        if stale is not None and stale > step:
+            raise RuntimeError(
+                f"checkpoint dir {self.base_dir!r} already holds a "
+                f"committed step {stale} > current step {step}; the "
+                f"handoff would restore that stale state — use a fresh "
+                f"directory for this elastic run")
+
+        t0 = time.perf_counter()
+        if self.mode == "handoff":
+            ckpt_lib.save_sharded(sdir, step, (ctx.params, ctx.state),
+                                  layout=ctx.layout, mesh=ctx.mesh,
+                                  blocking=True)
+        else:
+            legacy_ckpt.save(sdir, step, (ctx.params, ctx.state),
+                             blocking=True)
+        save_s = time.perf_counter() - t0
+        save_bytes = _dir_bytes(sdir)
+
+        # the remesh plan validates the commit: it refuses a handoff
+        # with no committed checkpoint, and names the step dir to
+        # restore from
+        plan = plan_elastic_remesh(self._leaves(ctx.shape), (),
+                                   model_parallel=1,
+                                   ckpt_base_dir=self.base_dir)
+        if plan.handoff is None or plan.handoff.step != step:
+            raise RuntimeError(
+                f"remesh handoff names step "
+                f"{getattr(plan.handoff, 'step', None)}, expected the "
+                f"step {step} just committed")
+        if plan.handoff.sharded != (self.mode == "handoff"):
+            raise RuntimeError(
+                f"checkpoint format mismatch: handoff.sharded="
+                f"{plan.handoff.sharded} under driver mode {self.mode!r}")
+
+        # building the new-mesh state (param init + jitted sharded-zero1
+        # init) is real handoff work — time it so the calibrated
+        # recompile cost does not undercount the cycle
+        t0 = time.perf_counter()
+        new = self._setup(event.mesh_shape, seed)
+        setup_s = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        if self.mode == "handoff":
+            rstep, (new.params, new.state) = ckpt_lib.restore_sharded(
+                plan.handoff.step_dir, (new.params, new.state),
+                shardings=(None, new.opt_shardings), layout=new.layout)
+        else:
+            rstep, (new.params, new.state) = legacy_ckpt.restore(
+                plan.handoff.step_dir, (new.params, new.state),
+                shardings=(None, new.opt_shardings))
+        restore_s = time.perf_counter() - t0
+        assert rstep == step, (rstep, step)
+
+        verified = False
+        if self.verify:
+            # the PR-4 bitwise handoff invariant, checked in place: the
+            # resharded state is the saved state, bit for bit
+            if not _trees_equal((ctx.params, ctx.state),
+                                (new.params, new.state)):
+                raise RuntimeError(
+                    f"handoff not bitwise: {ctx.shape} -> "
+                    f"{event.mesh_shape} at step {step}")
+            verified = True
+
+        return new, HandoffMeasurement(
+            step=step, from_shape=ctx.shape, to_shape=new.shape,
+            mode=self.mode, save_s=save_s, restore_s=restore_s,
+            first_step_s=0.0, setup_s=setup_s, save_bytes=save_bytes,
+            restore_bytes=save_bytes, state_bytes=state_bytes,
+            verified=verified)
+
+    # -------------------------------------------------------------- run
+    def run(self, n_steps: int,
+            schedule: Sequence[ReconfigEvent] = (), *,
+            initial_shape: Tuple[int, int] = (2, 2),
+            seed: int = 0) -> ElasticRunResult:
+        """Train ``n_steps``, executing every scheduled reconfiguration.
+
+        An empty ``schedule`` is the uninterrupted reference run — same
+        code path, so bitwise comparisons between the two are symmetric.
+        """
+        events = {}
+        for e in schedule:
+            if e.step in events:
+                raise ValueError(f"duplicate reconfig step {e.step}")
+            if e.step >= n_steps:
+                raise ValueError(
+                    f"reconfig step {e.step} is past the run "
+                    f"(n_steps={n_steps}); it would silently never fire")
+            if (e.mesh_shape[0] * e.mesh_shape[1]
+                    != initial_shape[0] * initial_shape[1]):
+                # same rank count R is what makes the deterministic
+                # reduce — and therefore the continuation — bitwise
+                raise ValueError(
+                    f"reconfig target {e.mesh_shape} is not a "
+                    f"factorization of the run's "
+                    f"{initial_shape[0] * initial_shape[1]} ranks")
+            events[e.step] = e
+        if events:
+            # fail before compiling anything: a previous run's committed
+            # checkpoint past the first event would win the handoff's
+            # latest_step lookup over the save this run makes
+            stale = ckpt_lib.latest_step(self.base_dir)
+            if stale is not None and stale > min(events):
+                raise RuntimeError(
+                    f"checkpoint dir {self.base_dir!r} already holds a "
+                    f"committed step {stale} past the first reconfig "
+                    f"event (step {min(events)}); the handoff would "
+                    f"restore that stale state — use a fresh directory "
+                    f"for this elastic run")
+        corpus = SyntheticCorpus(self.data_cfg)
+        ctx = self._setup(initial_shape, seed)
+        losses: List[float] = []
+        shapes: List[Tuple[int, int]] = []
+        measurements: List[HandoffMeasurement] = []
+        step_times: List[float] = []      # non-first steps per segment
+        first_step = True
+        for step in range(n_steps):
+            if step in events:
+                ctx, m = self._handoff(ctx, events[step], step, seed)
+                measurements.append(m)
+                first_step = True
+            batch = {k: jnp.asarray(v)
+                     for k, v in corpus.batch(step).items()}
+            t0 = time.perf_counter()
+            with ctx.mesh:
+                ctx.params, ctx.state, metrics = ctx.step_fn(
+                    ctx.params, ctx.state, batch)
+            dt = time.perf_counter() - t0
+            if first_step:
+                if measurements and measurements[-1].first_step_s == 0.0:
+                    measurements[-1].first_step_s = dt
+                first_step = False
+            else:
+                step_times.append(dt)
+            losses.append(float(metrics["loss"]))
+            shapes.append(ctx.shape)
+        # recompile cost = first post-handoff step minus the steady step
+        # time (the jit cache is cold on every new factorization)
+        steady = statistics.median(step_times) if step_times else 0.0
+        for m in measurements:
+            m.compile_s = max(0.0, m.first_step_s - steady)
+        return ElasticRunResult(losses=losses, measurements=measurements,
+                                mesh_shapes=shapes, params=ctx.params,
+                                opt_state=ctx.state,
+                                steady_step_s=steady)

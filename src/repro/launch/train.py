@@ -18,6 +18,83 @@ from repro.sharding import make_rules
 from repro.train import Trainer, TrainerConfig
 
 
+def _parse_reconfig_schedule(spec: str):
+    """'10:4x1,20:1x4' -> [ReconfigEvent(step=10, mesh_shape=(4, 1)), …]"""
+    from repro.elastic_driver import ReconfigEvent
+    events = []
+    for item in spec.split(","):
+        try:
+            step_s, shape_s = item.strip().split(":")
+            pod_s, data_s = shape_s.lower().split("x")
+            events.append(ReconfigEvent(step=int(step_s),
+                                        mesh_shape=(int(pod_s),
+                                                    int(data_s))))
+        except ValueError as e:
+            raise SystemExit(
+                f"bad --reconfig-at entry {item!r} (want STEP:PODxDATA,"
+                f" e.g. '10:4x1'): {e}")
+    return events
+
+
+def _run_elastic(args, cfg, model) -> None:
+    """--reconfig-at path: the elastic preemption/repack driver."""
+    from repro.data import DataConfig
+    from repro.elastic_driver import ElasticDriver
+
+    if not args.data_parallel:
+        raise SystemExit("--reconfig-at needs --data-parallel (the "
+                         "data axis of the initial factorization)")
+    if args.model_parallel != 1:
+        raise SystemExit("the elastic driver trains hier_bucketed_zero1 "
+                         "on a pure (pod, data) mesh; --model-parallel "
+                         "must be 1")
+    # the driver pins its training configuration; reject sync flags it
+    # would otherwise silently ignore ('xla' is the untouched default)
+    if args.cross_pod_mode not in ("xla", "hier_bucketed_zero1"):
+        raise SystemExit(
+            f"--reconfig-at implies cross_pod_mode=hier_bucketed_zero1; "
+            f"{args.cross_pod_mode!r} is not supported by the elastic "
+            f"driver")
+    if args.overlap:
+        raise SystemExit("--overlap has no pipeline under the driver's "
+                         "deterministic reduce")
+    if args.slow_compress_bits and not (args.slow_compress_bits == 8
+                                        and args.error_feedback):
+        raise SystemExit(
+            "the elastic driver compresses the slow hop only as int8 "
+            "with error feedback (--slow-compress-bits 8 "
+            "--error-feedback)")
+    schedule = _parse_reconfig_schedule(args.reconfig_at)
+    n_devices = args.pod_parallel * args.data_parallel
+    for e in schedule:
+        if e.mesh_shape[0] * e.mesh_shape[1] != n_devices:
+            raise SystemExit(
+                f"reconfig target {e.mesh_shape} is not a factorization "
+                f"of {n_devices} devices")
+        if e.step >= args.steps:
+            raise SystemExit(
+                f"reconfig step {e.step} is past the run "
+                f"(--steps {args.steps}); it would silently never fire")
+    drv = ElasticDriver(
+        model,
+        optim.AdamWConfig(peak_lr=args.lr, warmup_steps=20,
+                          total_steps=args.steps),
+        DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                   global_batch=args.batch),
+        base_dir=args.ckpt_dir, bucket_bytes=args.bucket_mb << 20,
+        accum=args.accum, mode=args.reconfig_mode,
+        error_feedback=args.error_feedback)
+    out = drv.run(args.steps, schedule,
+                  initial_shape=(args.pod_parallel, args.data_parallel))
+    for i, (loss, shape) in enumerate(zip(out.losses, out.mesh_shapes)):
+        print(f"step {i:4d}  loss {loss:.4f}  mesh {shape}")
+    for m in out.measurements:
+        print(f"reconfig@{m.step}: {m.from_shape}->{m.to_shape} "
+              f"[{m.mode}] save {m.save_s*1e3:.0f} ms, restore "
+              f"{m.restore_s*1e3:.0f} ms, recompile "
+              f"{m.compile_s*1e3:.0f} ms, verified={m.verified}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b", choices=ARCH_IDS)
@@ -65,12 +142,32 @@ def main():
                     help="write per-rank shard + manifest checkpoints "
                          "(repro.ckpt); --no-save-sharded keeps the "
                          "legacy gathered per-leaf format")
+    ap.add_argument("--reconfig-at", default="",
+                    help="elastic repack schedule 'STEP:PODxDATA[,...]' "
+                         "(e.g. '10:4x1,20:1x4'): run the elastic "
+                         "driver, executing a save -> reshard-restore "
+                         "-> continue cycle at each step; implies "
+                         "hier_bucketed_zero1 + deterministic reduce")
+    ap.add_argument("--reconfig-mode", default="handoff",
+                    choices=("drain", "handoff"),
+                    help="how --reconfig-at events move state: "
+                         "'handoff' = committed sharded save + "
+                         "reshard-restore (drain-free); 'drain' = "
+                         "legacy gathered save + full restore (the "
+                         "incumbent cycle, for cost comparison)")
+    ap.add_argument("--pod-parallel", type=int, default=1,
+                    help="pod axis of the initial (pod, data) "
+                         "factorization for --reconfig-at runs")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if not args.full_config:
         cfg = reduced_config(cfg)
     model = build_model(cfg, remat=args.full_config)
+
+    if args.reconfig_at:
+        _run_elastic(args, cfg, model)
+        return
 
     rules = None
     if args.data_parallel:

@@ -1,8 +1,13 @@
 """Job-level performance model: the §5.4 measured effects."""
 import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # no-network env: deterministic example-based shim
+    from tests._hypothesis_stub import given, settings, st
 
 from repro.core.jct_model import (WORKLOADS, PlacementView,
-                                  bucket_sync_times,
+                                  ReconfigCostModel, bucket_sync_times,
+                                  ckpt_state_bytes,
                                   exposed_slow_fraction,
                                   hier_sync_makespan, iteration_time,
                                   jct_scale)
@@ -135,3 +140,92 @@ def test_bucket_sync_times_degenerate_axes_and_compression():
                                  slow_bps=1e9, slow_bytes_per_elem=1.0)
     for a, b in zip(s8, s32):
         assert a == pytest.approx(b / 4.0)
+
+
+# ------------------------------------------- reconfiguration cost model
+
+def test_reconfig_cost_model_validation():
+    with pytest.raises(ValueError, match="mode"):
+        ReconfigCostModel(mode="magic")
+    with pytest.raises(ValueError, match="throughput"):
+        ReconfigCostModel(save_bps=0.0)
+
+
+def test_drain_mode_charges_exactly_the_drain():
+    cm = ReconfigCostModel()                    # mode="drain"
+    assert cm.job_suspension_s(1e12, drain_s=123.0) == 123.0
+    assert cm.geometry_s(base_s=110.0, drain_s=130.0) == 130.0
+
+
+def test_handoff_geometry_is_the_reconfigure_cycle_alone():
+    cm = ReconfigCostModel(mode="handoff")
+    assert cm.geometry_s(base_s=110.0, drain_s=130.0) == 110.0
+
+
+@settings(max_examples=40, deadline=None)
+@given(b1=st.floats(min_value=0.0, max_value=1e12),
+       b2=st.floats(min_value=0.0, max_value=1e12),
+       ranks=st.integers(min_value=1, max_value=64),
+       drain_s=st.floats(min_value=1.0, max_value=1e4))
+def test_property_handoff_monotone_in_state_bytes(b1, b2, ranks,
+                                                  drain_s):
+    """Calibrated handoff cost is monotone in state bytes..."""
+    cm = ReconfigCostModel(mode="handoff")
+    lo, hi = sorted((b1, b2))
+    assert cm.handoff_s(lo, n_ranks_old=ranks, n_ranks_new=ranks) <= \
+        cm.handoff_s(hi, n_ranks_old=ranks, n_ranks_new=ranks)
+    assert cm.job_suspension_s(lo, drain_s=drain_s, n_ranks_old=ranks,
+                               n_ranks_new=ranks) <= \
+        cm.job_suspension_s(hi, drain_s=drain_s, n_ranks_old=ranks,
+                            n_ranks_new=ranks)
+
+
+@settings(max_examples=40, deadline=None)
+@given(bytes_=st.floats(min_value=0.0, max_value=1e13),
+       ranks_old=st.integers(min_value=1, max_value=64),
+       ranks_new=st.integers(min_value=1, max_value=64),
+       drain_s=st.floats(min_value=0.0, max_value=1e5))
+def test_property_handoff_never_exceeds_drain(bytes_, ranks_old,
+                                              ranks_new, drain_s):
+    """...and never exceeds the drain cost it replaces."""
+    cm = ReconfigCostModel(mode="handoff")
+    charged = cm.job_suspension_s(bytes_, drain_s=drain_s,
+                                  n_ranks_old=ranks_old,
+                                  n_ranks_new=ranks_new)
+    assert charged <= drain_s + 1e-12
+    assert charged >= 0.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(ranks=st.integers(min_value=1, max_value=64))
+def test_property_more_ranks_never_slower(ranks):
+    """Sharded 1/F I/O: adding ranks never makes the handoff slower."""
+    cm = ReconfigCostModel(mode="handoff")
+    b = 4e9
+    assert cm.handoff_s(b, n_ranks_old=ranks + 1, n_ranks_new=ranks) <= \
+        cm.handoff_s(b, n_ranks_old=ranks, n_ranks_new=ranks)
+
+
+def test_from_measurements_calibration():
+    ms = [{"save_s": 2.0, "restore_s": 1.0, "compile_s": 0.5,
+           "save_bytes": 2e9, "restore_bytes": 3e9},
+          {"save_s": 4.0, "restore_s": 2.0, "compile_s": 1.5,
+           "save_bytes": 4e9, "restore_bytes": 6e9}]
+    cm = ReconfigCostModel.from_measurements(ms)
+    assert cm.mode == "handoff"
+    assert cm.save_bps == pytest.approx(1e9)
+    assert cm.restore_bps == pytest.approx(3e9)
+    assert cm.recompile_s == pytest.approx(1.0)
+    # bytes/ranks/bps arithmetic round-trips through the calibration
+    assert cm.handoff_s(8e9, n_ranks_old=2, n_ranks_new=4) == \
+        pytest.approx(8e9 / 2 / 1e9 + 8e9 / 4 / 3e9 + 1.0)
+    with pytest.raises(ValueError, match="zero measurements"):
+        ReconfigCostModel.from_measurements([])
+
+
+def test_ckpt_state_bytes_tracks_params():
+    """fp16 params + f32 master/mu/nu = 14 B/param, model-ordered."""
+    for name, w in WORKLOADS.items():
+        assert ckpt_state_bytes(name) == pytest.approx(
+            w.params_m * 1e6 * 14)
+    assert ckpt_state_bytes("bert-base") > ckpt_state_bytes("distilbert")

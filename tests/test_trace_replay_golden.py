@@ -5,6 +5,13 @@ idle-slice sums, and reconfiguration paths are pure refactor targets —
 this test pins the end-to-end replay of one fixed trace so any behavioral
 drift (as opposed to a speedup) shows up as a diff against these goldens.
 
+Each golden row also pins the reconfiguration accounting: reconfig /
+drain / handoff counts and the total suspension cost charged under each
+operational model.  The ``handoff`` rows replay DM with the
+software-coordinated handoff cost model (default calibration) instead of
+the drain-required cycle — the ``reconfig_mode`` threading is itself a
+refactor target.
+
 The numbers were produced by the current implementation on the pinned
 jax/numpy stack; the simulator is pure-Python float arithmetic, so they
 are deterministic and exact up to float tolerance.  If a PR changes them
@@ -16,41 +23,70 @@ import pytest
 from repro.core.simulator import simulate
 from repro.core.traces import TraceCategory, generate_trace
 
+# key: (mode, policy, reconfig_mode)
 GOLDEN = {
-    ("FM", "fifo"): dict(makespan=10837.26421867104,
-                         avg_jct=1872.2502029235643,
-                         avg_wait=3521.3905893048386,
-                         frag=0.0, util=0.8896557934142526,
-                         n_reconfigs=0, n_drains=0),
-    ("FM", "backfill"): dict(makespan=10940.805596136572,
-                             avg_jct=1849.9780332670705,
-                             avg_wait=3072.668295397557,
-                             frag=0.0, util=0.8767286709849166,
-                             n_reconfigs=0, n_drains=0),
-    ("DM", "fifo"): dict(makespan=15297.269497626332,
-                         avg_jct=1914.7769052604087,
-                         avg_wait=6179.540084837227,
-                         frag=493.9016722068024,
-                         util=0.6360196041436966,
-                         n_reconfigs=12, n_drains=9),
-    ("DM", "backfill"): dict(makespan=13005.961373381286,
-                             avg_jct=1920.5833568733121,
-                             avg_wait=4494.699267800047,
-                             frag=2552.584659606311,
-                             util=0.7530132437723299,
-                             n_reconfigs=11, n_drains=8),
-    ("SM", "fifo"): dict(makespan=11112.661617302752,
-                         avg_jct=1622.8848308179004,
-                         avg_wait=3788.0336721802314,
-                         frag=837.3283532341738,
-                         util=0.8451210263096537,
-                         n_reconfigs=0, n_drains=0),
-    ("SM", "backfill"): dict(makespan=10588.82432352852,
-                             avg_jct=1657.2080551997717,
-                             avg_wait=3211.9444299310267,
-                             frag=613.8954604205466,
-                             util=0.886929814311741,
-                             n_reconfigs=0, n_drains=0),
+    ("FM", "fifo", "drain"): dict(
+        makespan=10837.26421867104,
+        avg_jct=1872.2502029235643,
+        avg_wait=3521.3905893048386,
+        frag=0.0, util=0.8896557934142526,
+        n_reconfigs=0, n_drains=0, n_handoffs=0,
+        drain_cost_s=0.0, handoff_cost_s=0.0),
+    ("FM", "backfill", "drain"): dict(
+        makespan=10940.805596136572,
+        avg_jct=1849.9780332670705,
+        avg_wait=3072.668295397557,
+        frag=0.0, util=0.8767286709849166,
+        n_reconfigs=0, n_drains=0, n_handoffs=0,
+        drain_cost_s=0.0, handoff_cost_s=0.0),
+    ("DM", "fifo", "drain"): dict(
+        makespan=15297.269497626332,
+        avg_jct=1914.7769052604087,
+        avg_wait=6179.540084837227,
+        frag=493.9016722068024,
+        util=0.6360196041436966,
+        n_reconfigs=12, n_drains=9, n_handoffs=0,
+        drain_cost_s=1500.0, handoff_cost_s=0.0),
+    ("DM", "backfill", "drain"): dict(
+        makespan=13005.961373381286,
+        avg_jct=1920.5833568733121,
+        avg_wait=4494.699267800047,
+        frag=2552.584659606311,
+        util=0.7530132437723299,
+        n_reconfigs=11, n_drains=8, n_handoffs=0,
+        drain_cost_s=1680.0, handoff_cost_s=0.0),
+    ("DM", "fifo", "handoff"): dict(
+        makespan=14944.588666785026,
+        avg_jct=1869.672179453957,
+        avg_wait=5992.156895591864,
+        frag=460.4204483621651,
+        util=0.6343115299834757,
+        n_reconfigs=11, n_drains=0, n_handoffs=8,
+        drain_cost_s=0.0, handoff_cost_s=101.75349999999999),
+    ("DM", "backfill", "handoff"): dict(
+        makespan=12848.013932791822,
+        avg_jct=1872.3512009593335,
+        avg_wait=4157.649819602748,
+        frag=2421.757609743137,
+        util=0.7396481577407791,
+        n_reconfigs=12, n_drains=0, n_handoffs=9,
+        drain_cost_s=0.0, handoff_cost_s=184.80316666666664),
+    ("SM", "fifo", "drain"): dict(
+        makespan=11112.661617302752,
+        avg_jct=1622.8848308179004,
+        avg_wait=3788.0336721802314,
+        frag=837.3283532341738,
+        util=0.8451210263096537,
+        n_reconfigs=0, n_drains=0, n_handoffs=0,
+        drain_cost_s=0.0, handoff_cost_s=0.0),
+    ("SM", "backfill", "drain"): dict(
+        makespan=10588.82432352852,
+        avg_jct=1657.2080551997717,
+        avg_wait=3211.9444299310267,
+        frag=613.8954604205466,
+        util=0.886929814311741,
+        n_reconfigs=0, n_drains=0, n_handoffs=0,
+        drain_cost_s=0.0, handoff_cost_s=0.0),
 }
 
 
@@ -59,12 +95,12 @@ def _trace():
                           seed=7, double=False, max_size=4)
 
 
-@pytest.mark.parametrize("mode,policy", sorted(GOLDEN))
-def test_trace_replay_matches_golden(mode, policy):
+@pytest.mark.parametrize("mode,policy,reconfig", sorted(GOLDEN))
+def test_trace_replay_matches_golden(mode, policy, reconfig):
     jobs = _trace()
     assert len(jobs) == 31                     # the trace itself is pinned
-    r = simulate(jobs, mode, policy=policy)
-    g = GOLDEN[(mode, policy)]
+    r = simulate(jobs, mode, policy=policy, reconfig_mode=reconfig)
+    g = GOLDEN[(mode, policy, reconfig)]
     rel = 1e-9
     assert r.makespan == pytest.approx(g["makespan"], rel=rel)
     assert r.avg_jct == pytest.approx(g["avg_jct"], rel=rel)
@@ -74,4 +110,26 @@ def test_trace_replay_matches_golden(mode, policy):
     assert r.utilization == pytest.approx(g["util"], rel=rel)
     assert r.n_reconfigs == g["n_reconfigs"]
     assert r.n_drains == g["n_drains"]
+    assert r.n_handoffs == g["n_handoffs"]
+    assert r.drain_cost_s == pytest.approx(g["drain_cost_s"], abs=1e-9)
+    assert r.handoff_cost_s == pytest.approx(g["handoff_cost_s"],
+                                             abs=1e-9)
     assert r.n_jobs == len(jobs)
+    # the event records mirror the counters they aggregate
+    assert len(r.reconfig_events) == r.n_reconfigs
+    kinds = [e.kind for e in r.reconfig_events]
+    assert kinds.count("drain") == r.n_drains
+    assert kinds.count("handoff") == r.n_handoffs
+    assert sum(e.charged_s for e in r.reconfig_events) == pytest.approx(
+        r.drain_cost_s + r.handoff_cost_s)
+
+
+def test_handoff_never_charges_more_per_event():
+    """On the pinned trace, DM-handoff's total charged suspension is far
+    below DM-drain's — the operational claim the cost model encodes."""
+    jobs = _trace()
+    drain = simulate(jobs, "DM", policy="fifo")
+    handoff = simulate(jobs, "DM", policy="fifo",
+                       reconfig_mode="handoff")
+    assert drain.n_handoffs == 0 and handoff.n_drains == 0
+    assert handoff.handoff_cost_s < drain.drain_cost_s
