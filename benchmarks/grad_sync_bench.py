@@ -57,6 +57,7 @@ def _inner(quick: bool, out_path: str) -> None:
 
     from repro import optim
     from repro import parallel as PX
+    from repro.analysis import ir
     from repro.analysis.hlo import (DCN_BW_PER_CHIP, ICI_BW, analyze,
                                     slow_collective_chains)
     from repro.collectives import bucketing as BK
@@ -130,9 +131,10 @@ def _inner(quick: bool, out_path: str) -> None:
         jitted = jax.jit(PX.shard_map(
             fn, mesh=mesh, in_specs=(specs,), out_specs=specs,
             check_vma=False, axis_names={"pod", "data"}))
-        txt = jitted.lower(grads).compile().as_text()
-        st = analyze(txt, chips_per_pod=n_data)
-        chain = slow_collective_chains(txt, chips_per_pod=n_data)
+        # parse once into the shared IR; both checkers accept a Module
+        mod = ir.parse(jitted.lower(grads).compile().as_text())
+        st = analyze(mod, chips_per_pod=n_data)
+        chain = slow_collective_chains(mod, chips_per_pod=n_data)
         sync_hlo[name] = {
             "collective_ops": st.collective_ops,
             "n_collective_ops": int(sum(st.collective_ops.values())),

@@ -29,3 +29,9 @@ python -m pytest -x -q "$@"
 echo "== tier-1: SPMD layer on 4 forced host devices =="
 XLA_FLAGS="--xla_force_host_platform_device_count=4" \
     python -m pytest -x -q tests/test_parallel_compat.py
+
+# Pass 3: static HLO verification of the train-step matrix (the script
+# re-execs itself with its own pinned 4-device CPU backend, so the
+# ambient XLA_FLAGS cannot skew the budgets).  Zero findings required.
+echo "== tier-1: HLO invariant lint over the train-step matrix =="
+python scripts/lint_hlo.py

@@ -1,8 +1,8 @@
-"""Post-optimization HLO analysis for the roofline report.
+"""Post-optimization HLO accounting for the roofline report.
 
 ``compiled.cost_analysis()`` on this backend counts every ``while`` body
 once, which undercounts scanned layer stacks by ~n_layers.  This module
-parses ``compiled.as_text()`` into a computation call-graph, multiplies
+walks the shared HLO IR (:mod:`repro.analysis.ir`) call-graph, multiplies
 through ``backend_config known_trip_count`` on while ops, and accounts:
 
 - dot FLOPs (the MXU term; elementwise FLOPs are negligible at LM shapes),
@@ -10,150 +10,34 @@ through ``backend_config known_trip_count`` on while ops, and accounts:
 - collective traffic per op kind with a ring model
   (all-reduce 2x, all-gather/reduce-scatter (n-1)/n x full tensor, ...).
 
-All numbers are per device (the SPMD program is per device).
+All numbers are per device (the SPMD program is per device).  The parser,
+replica-group decoding and pod-cut classification live in
+:mod:`repro.analysis.ir` (shared with :mod:`repro.analysis.lint`);
+``analyze``/``slow_collective_chains`` accept either raw HLO text or an
+already-parsed :class:`~repro.analysis.ir.Module`, so callers that run
+several checkers over one program parse it once.
 """
 from __future__ import annotations
 
 import dataclasses
-import json
-import math
 import re
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple, Union
 
-_DTYPE_BYTES = {
-    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
-    "f8e5m2": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
-    "c64": 8, "c128": 16,
-}
+from repro.analysis import ir
+from repro.analysis.ir import (Computation, Module, Op,  # noqa: F401
+                               parse_module, type_bytes)
 
-_TYPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-_FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
-             "bitcast", "after-all", "add-dependency", "partition-id",
-             "replica-id", "iota"}
-_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
-                "collective-permute")
+_COLLECTIVES = ir.COLLECTIVE_PREFIXES
+_FREE_OPS = ir.FREE_OPS
+_TYPE_RE = ir.TYPE_RE
+_parse_replica_groups = ir.parse_replica_groups
+_crosses_pod = ir.crosses_pod
+
+ModuleLike = Union[str, Module]
 
 
-def type_bytes(type_str: str) -> int:
-    total = 0
-    for m in _TYPE_RE.finditer(type_str):
-        dt, shape = m.group(1), m.group(2)
-        if dt not in _DTYPE_BYTES:
-            continue
-        n = 1
-        if shape:
-            for d in shape.split(","):
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
-    return total
-
-
-@dataclasses.dataclass
-class Op:
-    name: str
-    result_type: str
-    opcode: str
-    operands: List[str]
-    attrs: str
-    is_root: bool = False
-
-
-@dataclasses.dataclass
-class Computation:
-    name: str
-    params: Dict[str, str]
-    ops: List[Op]
-
-
-_COMP_HEADER = re.compile(
-    r"^(?:ENTRY )?%?([\w.\-]+)\s*\((.*?)\)\s*->\s*(.+?)\s*\{\s*$")
-_OP_LINE = re.compile(
-    r"^\s*(ROOT\s+)?%([\w.\-]+)\s*=\s*(\(.*?\)|\S+)\s+([\w\-]+)\((.*)$")
-
-
-def _parse_operands(rest: str) -> Tuple[List[str], str]:
-    """Split the operand list (up to the matching close paren) from attrs."""
-    depth = 1
-    for i, ch in enumerate(rest):
-        if ch == "(":
-            depth += 1
-        elif ch == ")":
-            depth -= 1
-            if depth == 0:
-                inner, attrs = rest[:i], rest[i + 1:]
-                ops = [o.strip() for o in _split_top(inner)]
-                names = [o.split()[-1].lstrip("%") for o in ops if o]
-                return names, attrs
-    return [], rest
-
-
-def _split_top(s: str) -> List[str]:
-    out, depth, cur = [], 0, []
-    for ch in s:
-        if ch in "([{":
-            depth += 1
-        elif ch in ")]}":
-            depth -= 1
-        if ch == "," and depth == 0:
-            out.append("".join(cur))
-            cur = []
-        else:
-            cur.append(ch)
-    if cur:
-        out.append("".join(cur))
-    return out
-
-
-def parse_module(text: str) -> Dict[str, Computation]:
-    comps: Dict[str, Computation] = {}
-    cur: Optional[Computation] = None
-    entry_name = None
-    for line in text.splitlines():
-        if cur is None:
-            m = _COMP_HEADER.match(line.strip())
-            if m and ("->" in line):
-                params = {}
-                for p in _split_top(m.group(2)):
-                    p = p.strip()
-                    if ":" in p:
-                        nm, ty = p.split(":", 1)
-                        params[nm.strip().lstrip("%")] = ty.strip()
-                cur = Computation(m.group(1), params, [])
-                if line.strip().startswith("ENTRY"):
-                    entry_name = m.group(1)
-            continue
-        if line.strip() == "}":
-            comps[cur.name] = cur
-            cur = None
-            continue
-        m = _OP_LINE.match(line)
-        if m:
-            root, name, rtype, opcode, rest = m.groups()
-            operands, attrs = _parse_operands(rest)
-            cur.ops.append(Op(name, rtype, opcode, operands, attrs,
-                              is_root=bool(root)))
-    if entry_name:
-        comps["__entry__"] = comps[entry_name]
-    return comps
-
-
-def _trip_count(op: Op, comps: Dict[str, Computation]) -> int:
-    m = re.search(r'known_trip_count.*?"n":"(\d+)"', op.attrs)
-    if m:
-        return int(m.group(1))
-    m = re.search(r"condition=%([\w.\-]+)", op.attrs)
-    if m and m.group(1) in comps:
-        consts = [int(x) for x in re.findall(
-            r"constant\((\d+)\)", "\n".join(
-                o.attrs + o.result_type for o in comps[m.group(1)].ops))]
-        # also look at raw ops text
-        for o in comps[m.group(1)].ops:
-            if o.opcode == "constant":
-                pass
-        if consts:
-            return max(consts)
-    return 1
+def _as_module(src: ModuleLike) -> Module:
+    return src if isinstance(src, Module) else ir.parse(src)
 
 
 def _dot_flops(op: Op, types: Dict[str, str]) -> float:
@@ -194,49 +78,6 @@ def _collective_traffic(op: Op, types: Dict[str, str]) -> float:
     return operand_bytes
 
 
-def _parse_replica_groups(attrs: str) -> Optional[List[List[int]]]:
-    """Parse replica_groups in iota (`[2,4]<=[8]` / `...T(1,0)`) or
-    explicit (`{{0,1},{2,3}}`) form.  Returns list of device-id groups."""
-    m = re.search(
-        r"replica_groups=\[([\d,]+)\]<=\[([\d,]+)\](T\(([\d,]+)\))?",
-        attrs)
-    if m:
-        out_dims = [int(x) for x in m.group(1).split(",")]
-        in_dims = [int(x) for x in m.group(2).split(",")]
-        n = 1
-        for d in in_dims:
-            n *= d
-        ids = list(range(n))
-        if m.group(4):            # transpose of the reshaped iota
-            perm = [int(x) for x in m.group(4).split(",")]
-            import numpy as _np
-            ids = list(_np.arange(n).reshape(in_dims).transpose(
-                perm).reshape(-1))
-        rows, cols = out_dims[0], out_dims[1] if len(out_dims) > 1 else 1
-        return [[int(ids[r * cols + c]) for c in range(cols)]
-                for r in range(rows)]
-    m = re.search(r"replica_groups=\{(\{[^=]*?\})\}", attrs)
-    if m:
-        return [[int(x) for x in g.split(",") if x.strip()]
-                for g in re.findall(r"\{([\d,\s]*)\}", m.group(1))]
-    return None
-
-
-def _crosses_pod(op: Op, chips_per_pod: int) -> bool:
-    if op.opcode.startswith("collective-permute"):
-        pairs = re.findall(r"\{(\d+),(\d+)\}", op.attrs)
-        return any(int(a) // chips_per_pod != int(b) // chips_per_pod
-                   for a, b in pairs)
-    groups = _parse_replica_groups(op.attrs)
-    if groups is None:
-        return True               # conservatively cross-pod
-    for g in groups:
-        pods = {d // chips_per_pod for d in g}
-        if len(pods) > 1:
-            return True
-    return False
-
-
 @dataclasses.dataclass
 class HloStats:
     dot_flops: float = 0.0
@@ -260,15 +101,11 @@ class HloStats:
                                       + int(v * mult))
 
 
-def analyze(text: str, *, chips_per_pod: Optional[int] = None) -> HloStats:
-    comps = parse_module(text)
+def analyze(src: ModuleLike, *,
+            chips_per_pod: Optional[int] = None) -> HloStats:
+    mod = _as_module(src)
+    comps = mod.computations
     memo: Dict[str, HloStats] = {}
-
-    def comp_types(c: Computation) -> Dict[str, str]:
-        t = dict(c.params)
-        for op in c.ops:
-            t[op.name] = op.result_type
-        return t
 
     def visit(name: str, stack=()) -> HloStats:
         if name in memo:
@@ -276,19 +113,20 @@ def analyze(text: str, *, chips_per_pod: Optional[int] = None) -> HloStats:
         if name not in comps or name in stack:
             return HloStats()
         c = comps[name]
-        types = comp_types(c)
+        types = c.result_types()
         st = HloStats()
         for op in c.ops:
             oc = op.opcode
             if oc == "while":
-                trips = _trip_count(op, comps)
-                bm = re.search(r"body=%([\w.\-]+)", op.attrs)
+                trips = mod.trip_count(op)
+                bm = re.search(r"body=%?([\w.\-]+)", op.attrs)
                 if bm:
                     st.add(visit(bm.group(1), stack + (name,)), trips)
                 continue
             if oc == "conditional":
-                bm = re.findall(r"%([\w.\-]+)", op.attrs.split(
+                bm = re.findall(r"%?([\w.\-]+)", op.attrs.split(
                     "branch_computations", 1)[-1].split("}", 1)[0])
+                bm = [b for b in bm if b in comps]
                 if bm:
                     subs = [visit(b, stack + (name,)) for b in bm]
                     best = max(subs, key=lambda s: s.dot_flops
@@ -296,7 +134,7 @@ def analyze(text: str, *, chips_per_pod: Optional[int] = None) -> HloStats:
                     st.add(best)
                 continue
             if oc in ("fusion", "call", "async-start"):
-                cm = re.search(r"(?:calls|to_apply)=%([\w.\-]+)", op.attrs)
+                cm = re.search(r"(?:calls|to_apply)=%?([\w.\-]+)", op.attrs)
                 if cm:
                     sub = visit(cm.group(1), stack + (name,))
                     # only dot flops counted from inside fusions; bytes are
@@ -312,7 +150,7 @@ def analyze(text: str, *, chips_per_pod: Optional[int] = None) -> HloStats:
                     st.add(only)
             if oc in ("dot", "convolution"):
                 st.dot_flops += _dot_flops(op, types)
-            if any(oc.startswith(k) for k in _COLLECTIVES):
+            if op.is_collective:
                 traffic = _collective_traffic(op, types)
                 operand = sum(type_bytes(types.get(o, ""))
                               for o in op.operands)
@@ -329,7 +167,9 @@ def analyze(text: str, *, chips_per_pod: Optional[int] = None) -> HloStats:
         memo[name] = st
         return st
 
-    return visit("__entry__")
+    if mod.entry is None:
+        return HloStats()
+    return visit(mod.entry.name)
 
 
 # ---------------------------------------------------------------------------
@@ -363,11 +203,12 @@ class SlowChain:
                                     self.dependent_pairs[:16]]}
 
 
-def slow_collective_chains(text: str, *, chips_per_pod: int) -> SlowChain:
+def slow_collective_chains(src: ModuleLike, *,
+                           chips_per_pod: int) -> SlowChain:
     """Prove (or refute) slow-collective independence from lowered HLO.
 
     Walks the def-use graph of the module: every collective op whose
-    replica groups cross the pod cut (``_crosses_pod``) becomes a node,
+    replica groups cross the pod cut (``ir.crosses_pod``) becomes a node,
     and node B depends on node A when A is in the transitive operand
     cone of B.  Called computations (fusion/call/while bodies) are
     followed with parameter-index binding (``parameter(i)`` ops take the
@@ -380,20 +221,12 @@ def slow_collective_chains(text: str, *, chips_per_pod: int) -> SlowChain:
     a trip-counted loop serializes its body regardless, and the flat
     (scan-free) sync schedules this checker gates contain no whiles.
     """
-    comps = parse_module(text)
+    mod = _as_module(src)
+    comps = mod.computations
     depth: Dict[int, int] = {}
     names: Dict[int, str] = {}
     pairs: List[Tuple[str, str]] = []
     counter = iter(range(1 << 30))
-
-    def called_comps(op: Op) -> List[str]:
-        keys = ("calls", "to_apply", "body", "condition")
-        out = []
-        for k in keys:
-            m = re.search(rf"\b{k}=%?([\w.\-]+)", op.attrs)
-            if m and m.group(1) in comps:
-                out.append(m.group(1))
-        return out
 
     def register(op: Op, qual: str, cone: frozenset) -> frozenset:
         sid = next(counter)
@@ -429,7 +262,7 @@ def slow_collective_chains(text: str, *, chips_per_pod: int) -> SlowChain:
             cone = frozenset().union(
                 *(cones.get(o, frozenset()) for o in op.operands)) \
                 if op.operands else frozenset()
-            subs = called_comps(op)
+            subs = mod.called_computations(op)
             if subs:
                 sub_params = tuple(cones.get(o, frozenset())
                                    for o in op.operands)
@@ -448,10 +281,8 @@ def slow_collective_chains(text: str, *, chips_per_pod: int) -> SlowChain:
                                        for pc in sub_params),
                             stack + (comp_name,), register_nodes=False)
                     cone = cone | sub_cone
-            oc = op.opcode
-            if (register_nodes
-                    and any(oc.startswith(k) for k in _COLLECTIVES)
-                    and not oc.endswith("-done")
+            if (register_nodes and op.is_collective
+                    and not op.is_async_done
                     and chips_per_pod
                     and _crosses_pod(op, chips_per_pod)):
                 cone = register(op, f"{comp_name}/{op.name}", cone)
@@ -460,7 +291,7 @@ def slow_collective_chains(text: str, *, chips_per_pod: int) -> SlowChain:
                 out = cone
         return out if out is not None else frozenset()
 
-    entry = comps.get("__entry__")
+    entry = mod.entry
     if entry is not None:
         visit(entry.name, (frozenset(),) * len(entry.params), ())
     return SlowChain(n_slow=len(depth),

@@ -1,0 +1,562 @@
+"""Shared HLO IR: one parser for every static-analysis consumer.
+
+XLA prints two closely related textual dialects and this repo needs both:
+
+- **post-optimization** (``compiled.as_text()``): ``%``-sigiled op names,
+  full computation headers (``%comp (p: f32[4]) -> f32[4] {``), an
+  ``input_output_alias={...}`` module attribute recording which entry
+  parameters were actually donated into outputs, async collectives split
+  into ``-start``/``-done`` pairs, ``while`` ops carrying
+  ``known_trip_count`` backend configs.
+- **pre-optimization** (``lowered.as_text("hlo")``): bare op names,
+  header-less computations (params only exist as ``parameter(i)`` ops),
+  a ``buffer_donor={...}`` module attribute recording which entry
+  parameters the caller *offered* for donation, and ``opt-barrier`` ops
+  that the backend consumes before the optimized print.
+
+This module parses either into one :class:`Module` graph (computations,
+ops, call edges with trip counts, async pairing, replica-group decoding,
+donation/aliasing headers).  ``repro.analysis.hlo`` (roofline accounting,
+slow-collective chains) and ``repro.analysis.lint`` (invariant rules)
+both build on it — the parser is shared so a printer quirk gets fixed
+once, not per checker.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
+
+# ---------------------------------------------------------------------------
+# types / bytes
+# ---------------------------------------------------------------------------
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+# dtypes wide enough for gradient/loss accumulation (the precision rule)
+ACCUM_SAFE_DTYPES = frozenset({"f32", "f64", "s32", "u32", "s64", "u64"})
+
+TYPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+COLLECTIVE_PREFIXES = ("all-reduce", "all-gather", "reduce-scatter",
+                       "all-to-all", "collective-permute")
+
+FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+            "bitcast", "after-all", "add-dependency", "partition-id",
+            "replica-id", "iota"}
+
+
+def type_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for m in TYPE_RE.finditer(type_str):
+        dt, shape = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if shape:
+            for d in shape.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def type_dtypes(type_str: str) -> Tuple[str, ...]:
+    """Element dtypes appearing in a (possibly tuple) HLO type string."""
+    return tuple(m.group(1) for m in TYPE_RE.finditer(type_str)
+                 if m.group(1) in DTYPE_BYTES)
+
+
+# ---------------------------------------------------------------------------
+# IR dataclasses
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    result_type: str
+    opcode: str
+    operands: List[str]
+    attrs: str
+    is_root: bool = False
+
+    @property
+    def is_collective(self) -> bool:
+        return any(self.opcode.startswith(k) for k in COLLECTIVE_PREFIXES)
+
+    @property
+    def is_async_start(self) -> bool:
+        return self.opcode.endswith("-start")
+
+    @property
+    def is_async_done(self) -> bool:
+        return self.opcode.endswith("-done")
+
+    @property
+    def collective_kind(self) -> Optional[str]:
+        """Base collective kind with the async suffix stripped."""
+        if not self.is_collective:
+            return None
+        k = self.opcode
+        for suf in ("-start", "-done"):
+            if k.endswith(suf):
+                k = k[: -len(suf)]
+        return k
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    params: Dict[str, str]             # header params (post-opt dialect)
+    ops: List[Op]
+
+    @property
+    def root(self) -> Optional[Op]:
+        for op in self.ops:
+            if op.is_root:
+                return op
+        return self.ops[-1] if self.ops else None
+
+    def op(self, name: str) -> Optional[Op]:
+        for o in self.ops:
+            if o.name == name:
+                return o
+        return None
+
+    def result_types(self) -> Dict[str, str]:
+        """name -> type for header params and every op result."""
+        t = dict(self.params)
+        for op in self.ops:
+            t[op.name] = op.result_type
+        return t
+
+
+@dataclasses.dataclass
+class AliasEntry:
+    """One ``input_output_alias`` record: output buffer <- entry param."""
+
+    output_index: Tuple[int, ...]
+    param_number: int
+    param_index: Tuple[int, ...]
+    kind: str                          # "may-alias" | "must-alias"
+
+
+@dataclasses.dataclass
+class Module:
+    """A parsed HLO module (either textual dialect)."""
+
+    name: str
+    header: str                        # the full HloModule line
+    computations: Dict[str, Computation]
+    entry_name: Optional[str]
+
+    # -- structure ----------------------------------------------------------
+
+    @property
+    def entry(self) -> Optional[Computation]:
+        if self.entry_name and self.entry_name in self.computations:
+            return self.computations[self.entry_name]
+        return None
+
+    def ops(self) -> Iterator[Tuple[Computation, Op]]:
+        for c in self.computations.values():
+            for op in c.ops:
+                yield c, op
+
+    def called_computations(self, op: Op) -> List[str]:
+        """Computation names an op calls (fusion/call/while/cond/async)."""
+        out = []
+        for key in ("calls", "to_apply", "body", "condition"):
+            m = re.search(rf"\b{key}=%?([\w.\-]+)", op.attrs)
+            if m and m.group(1) in self.computations:
+                out.append(m.group(1))
+        m = re.search(r"branch_computations=\{([^}]*)\}", op.attrs)
+        if m:
+            for nm in re.findall(r"%?([\w.\-]+)", m.group(1)):
+                if nm in self.computations:
+                    out.append(nm)
+        return out
+
+    def apply_computation(self, op: Op) -> Optional[Computation]:
+        """The reduction computation of a collective (``to_apply=``)."""
+        m = re.search(r"\bto_apply=%?([\w.\-]+)", op.attrs)
+        return self.computations.get(m.group(1)) if m else None
+
+    def trip_count(self, op: Op) -> int:
+        """Trip count of a ``while`` op (backend config, else cond consts)."""
+        m = re.search(r'known_trip_count.*?"n":"(\d+)"', op.attrs)
+        if m:
+            return int(m.group(1))
+        m = re.search(r"condition=%?([\w.\-]+)", op.attrs)
+        if m and m.group(1) in self.computations:
+            consts = [int(x) for x in re.findall(
+                r"constant\((\d+)\)", "\n".join(
+                    o.attrs + o.result_type
+                    for o in self.computations[m.group(1)].ops))]
+            if consts:
+                return max(consts)
+        return 1
+
+    def async_pairs(self) -> Dict[str, str]:
+        """``-start`` op name -> the ``-done`` op name consuming it.
+
+        Pairing is by operand reference within the same computation — the
+        printed form an async collective takes on backends that split it
+        (``all-reduce-start``/``all-reduce-done``, ``all-gather-start``).
+        """
+        pairs: Dict[str, str] = {}
+        for c in self.computations.values():
+            starts = {op.name for op in c.ops if op.is_async_start}
+            for op in c.ops:
+                if op.is_async_done:
+                    for o in op.operands:
+                        if o in starts:
+                            pairs[o] = op.name
+        return pairs
+
+    # -- module-header facts ------------------------------------------------
+
+    def buffer_donors(self) -> Set[int]:
+        """Entry-parameter numbers offered for donation (pre-opt header)."""
+        body = _balanced_field(self.header, "buffer_donor=")
+        if body is None:
+            return set()
+        return {int(m.group(1))
+                for m in re.finditer(r"\((\d+),\s*\{[\d,\s]*\}\)", body)}
+
+    def input_output_aliases(self) -> List[AliasEntry]:
+        """Realized donation pairs (post-opt header)."""
+        body = _balanced_field(self.header, "input_output_alias=")
+        if body is None:
+            return []
+        out = []
+        for m in re.finditer(
+                r"\{([\d,\s]*)\}:\s*\((\d+),\s*\{([\d,\s]*)\}"
+                r"(?:,\s*([\w\-]+))?\)", body):
+            out.append(AliasEntry(
+                output_index=_int_tuple(m.group(1)),
+                param_number=int(m.group(2)),
+                param_index=_int_tuple(m.group(3)),
+                kind=m.group(4) or "may-alias"))
+        return out
+
+    def aliased_param_numbers(self) -> Set[int]:
+        return {a.param_number for a in self.input_output_aliases()}
+
+    # -- call-graph walk ----------------------------------------------------
+
+    def walk_entry(self) -> Iterator[Tuple[Computation, Op, float]]:
+        """Yield (computation, op, multiplicity) reachable from the entry.
+
+        Multiplicity multiplies through ``while`` trip counts; each called
+        computation is visited per distinct call chain but cycles are cut.
+        Conditional branches are all walked at multiplicity 1 (an upper
+        bound — the lint rules care about what *can* execute).
+        """
+        if self.entry is None:
+            return
+
+        def visit(comp: Computation, mult: float,
+                  stack: Tuple[str, ...]) -> Iterator:
+            if comp.name in stack:
+                return
+            for op in comp.ops:
+                yield comp, op, mult
+                m = mult
+                if op.opcode == "while":
+                    m = mult * self.trip_count(op)
+                for sub in self.called_computations(op):
+                    if op.opcode == "while" and sub != _body_name(op):
+                        # the condition runs trips+1 times but contains no
+                        # accountable work; walk it once
+                        yield from visit(self.computations[sub], mult,
+                                         stack + (comp.name,))
+                        continue
+                    yield from visit(self.computations[sub], m,
+                                     stack + (comp.name,))
+
+        yield from visit(self.entry, 1.0, ())
+
+
+def _body_name(op: Op) -> Optional[str]:
+    m = re.search(r"\bbody=%?([\w.\-]+)", op.attrs)
+    return m.group(1) if m else None
+
+
+def _int_tuple(s: str) -> Tuple[int, ...]:
+    return tuple(int(x) for x in s.split(",") if x.strip())
+
+
+def _balanced_field(header: str, key: str) -> Optional[str]:
+    """Extract a ``key={...}`` module attribute with nested braces."""
+    i = header.find(key)
+    if i < 0:
+        return None
+    j = header.find("{", i)
+    if j < 0:
+        return None
+    depth = 0
+    for k in range(j, len(header)):
+        if header[k] == "{":
+            depth += 1
+        elif header[k] == "}":
+            depth -= 1
+            if depth == 0:
+                return header[j + 1:k]
+    return None
+
+
+# ---------------------------------------------------------------------------
+# parsing
+# ---------------------------------------------------------------------------
+
+_COMP_HEADER_FULL = re.compile(
+    r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->\s*(.+?)\s*\{\s*$")
+_COMP_HEADER_BARE = re.compile(
+    r"^(ENTRY\s+)?%?([\w.\-]+)\s*\{\s*$")
+_OP_START = re.compile(r"^\s*(ROOT\s+)?%?[\w.\-]+\s*=\s*")
+
+
+def _split_top(s: str) -> List[str]:
+    """Split on top-level commas (outside (), [], {})."""
+    out, depth, cur = [], 0, []
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur))
+    return out
+
+
+def _bracket_balance(line: str) -> int:
+    """Net open-bracket count, ignoring bracket chars inside "..." strings
+    (``metadata={op_name="jit(main)/..."}`` must not skew the balance)."""
+    depth = 0
+    in_str = False
+    for ch in line:
+        if ch == '"':
+            in_str = not in_str
+        elif not in_str:
+            if ch in "([{":
+                depth += 1
+            elif ch in ")]}":
+                depth -= 1
+    return depth
+
+
+def _parse_operands(rest: str) -> Tuple[List[str], str]:
+    """Split the operand list (to the matching close paren) from attrs."""
+    depth = 1
+    in_str = False
+    for i, ch in enumerate(rest):
+        if ch == '"':
+            in_str = not in_str
+        elif not in_str:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    inner, attrs = rest[:i], rest[i + 1:]
+                    parts = [o.strip() for o in _split_top(inner)]
+                    names = [o.split()[-1].lstrip("%")
+                             for o in parts if o]
+                    return names, attrs
+    return [], rest
+
+
+def _match_paren(s: str, start: int) -> int:
+    """Index of the ``)`` matching the ``(`` at ``start`` (-1 if none)."""
+    depth = 0
+    for i in range(start, len(s)):
+        if s[i] == "(":
+            depth += 1
+        elif s[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return i
+    return -1
+
+
+def parse_op_line(line: str) -> Optional[Op]:
+    """Parse one (logical) op line in either dialect.
+
+    Handles ``%``-sigiled and bare names, tuple result types with nested
+    parens (``((f32[], f32[]), s32[])``), and attrs that were joined from
+    printer-wrapped continuation lines.
+    """
+    s = line.strip()
+    root = False
+    if s.startswith("ROOT "):
+        root = True
+        s = s[5:].lstrip()
+    m = re.match(r"%?([\w.\-]+)\s*=\s*", s)
+    if not m:
+        return None
+    name = m.group(1)
+    s = s[m.end():]
+    if s.startswith("("):                      # tuple result type
+        end = _match_paren(s, 0)
+        if end < 0:
+            return None
+        rtype, s = s[:end + 1], s[end + 1:].lstrip()
+        # layout suffix on the tuple, e.g. "(f32[2]{0})"
+    else:
+        sp = s.find(" ")
+        if sp < 0:
+            return None
+        rtype, s = s[:sp], s[sp + 1:].lstrip()
+    m = re.match(r"([\w\-]+)\(", s)
+    if not m:
+        return None
+    opcode = m.group(1)
+    operands, attrs = _parse_operands(s[m.end():])
+    return Op(name=name, result_type=rtype, opcode=opcode,
+              operands=operands, attrs=attrs.strip(), is_root=root)
+
+
+def _logical_lines(text: str) -> Iterator[str]:
+    """Join printer-wrapped op lines into single logical lines.
+
+    An op whose attrs wrap (long ``replica_groups``, ``backend_config``)
+    leaves the line with unbalanced brackets; continuation lines are
+    appended until the balance closes.  Computation headers / closing
+    braces are never merged.
+    """
+    pending: Optional[str] = None
+    balance = 0
+    for raw in text.splitlines():
+        if pending is not None:
+            pending += " " + raw.strip()
+            balance += _bracket_balance(raw)
+            if balance <= 0:
+                yield pending
+                pending = None
+            continue
+        stripped = raw.strip()
+        if _OP_START.match(raw):
+            b = _bracket_balance(raw)
+            if b > 0:
+                pending = stripped
+                balance = b
+                continue
+        yield raw
+
+
+def parse(text: str) -> Module:
+    """Parse an HLO module in either textual dialect into a :class:`Module`."""
+    header = ""
+    name = ""
+    comps: Dict[str, Computation] = {}
+    entry_name: Optional[str] = None
+    cur: Optional[Computation] = None
+    for line in _logical_lines(text):
+        stripped = line.strip()
+        if not header and stripped.startswith("HloModule"):
+            header = stripped
+            m = re.match(r"HloModule\s+([\w.\-]+)", stripped)
+            name = m.group(1) if m else ""
+            continue
+        if cur is None:
+            m = _COMP_HEADER_FULL.match(stripped)
+            if m:
+                params = {}
+                for p in _split_top(m.group(3)):
+                    p = p.strip()
+                    if ":" in p:
+                        nm, ty = p.split(":", 1)
+                        params[nm.strip().lstrip("%")] = ty.strip()
+                cur = Computation(m.group(2), params, [])
+                if m.group(1):
+                    entry_name = m.group(2)
+                continue
+            m = _COMP_HEADER_BARE.match(stripped)
+            if m and not _OP_START.match(line):
+                cur = Computation(m.group(2), {}, [])
+                if m.group(1):
+                    entry_name = m.group(2)
+            continue
+        if stripped == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        op = parse_op_line(line)
+        if op is not None:
+            cur.ops.append(op)
+    if cur is not None:                        # unterminated tail
+        comps[cur.name] = cur
+    return Module(name=name, header=header, computations=comps,
+                  entry_name=entry_name)
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    """Legacy view: computation dict with an ``__entry__`` alias.
+
+    The pre-IR interface of ``repro.analysis.hlo.parse_module``; kept so
+    existing accounting code and tests keep working unchanged.
+    """
+    mod = parse(text)
+    comps = dict(mod.computations)
+    if mod.entry is not None:
+        comps["__entry__"] = mod.entry
+    return comps
+
+
+# ---------------------------------------------------------------------------
+# replica groups / pod-cut classification
+# ---------------------------------------------------------------------------
+
+def parse_replica_groups(attrs: str) -> Optional[List[List[int]]]:
+    """Decode ``replica_groups`` in iota (``[2,4]<=[8]`` / ``...T(1,0)``)
+    or explicit (``{{0,1},{2,3}}``) form into device-id groups."""
+    m = re.search(
+        r"replica_groups=\[([\d,]+)\]<=\[([\d,]+)\](T\(([\d,]+)\))?",
+        attrs)
+    if m:
+        out_dims = [int(x) for x in m.group(1).split(",")]
+        in_dims = [int(x) for x in m.group(2).split(",")]
+        n = 1
+        for d in in_dims:
+            n *= d
+        ids = list(range(n))
+        if m.group(4):            # transpose of the reshaped iota
+            perm = [int(x) for x in m.group(4).split(",")]
+            import numpy as _np
+            ids = list(_np.arange(n).reshape(in_dims).transpose(
+                perm).reshape(-1))
+        rows, cols = out_dims[0], out_dims[1] if len(out_dims) > 1 else 1
+        return [[int(ids[r * cols + c]) for c in range(cols)]
+                for r in range(rows)]
+    m = re.search(r"replica_groups=\{(\{[^=]*?\})\}", attrs)
+    if m:
+        return [[int(x) for x in g.split(",") if x.strip()]
+                for g in re.findall(r"\{([\d,\s]*)\}", m.group(1))]
+    return None
+
+
+def crosses_pod(op: Op, chips_per_pod: int) -> bool:
+    """Whether a collective's groups span the pod cut (slow tier)."""
+    if op.opcode.startswith("collective-permute"):
+        pairs = re.findall(r"\{(\d+),(\d+)\}", op.attrs)
+        return any(int(a) // chips_per_pod != int(b) // chips_per_pod
+                   for a, b in pairs)
+    groups = parse_replica_groups(op.attrs)
+    if groups is None:
+        return True               # conservatively cross-pod
+    for g in groups:
+        pods = {d // chips_per_pod for d in g}
+        if len(pods) > 1:
+            return True
+    return False

@@ -1,0 +1,15 @@
+"""HLO invariant linter: machine-checked collective/determinism/donation
+/precision contracts for the train-step matrix.
+
+Every rule here encodes a bug this repo actually shipped and debugged by
+hand (see ``rules.py`` docstrings for the history).  ``scripts/lint_hlo.py``
+lowers the canonical ``cross_pod_mode x overlap x det x zero1`` matrix and
+runs all rules against ``analysis/budgets.json``; CI fails on any finding.
+"""
+from repro.analysis.lint.core import (Finding, LintContext, all_rules,
+                                      budget_for, load_budgets, rule,
+                                      run_rules)
+from repro.analysis.lint import rules as _rules  # noqa: F401  (registers)
+
+__all__ = ["Finding", "LintContext", "all_rules", "budget_for",
+           "load_budgets", "rule", "run_rules"]

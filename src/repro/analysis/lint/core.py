@@ -1,0 +1,128 @@
+"""Lint-rule registry over the shared HLO IR.
+
+A rule is a function ``(LintContext) -> List[Finding]`` registered under a
+stable id with the :func:`rule` decorator.  The context carries both
+textual dialects of one lowered train step — the **post-optimization**
+module (``compiled.as_text()``: realized aliasing, scheduled collectives)
+and the **pre-optimization** module (``lowered.as_text("hlo")``: donation
+offers in ``buffer_donor``, ``opt-barrier`` ops the backend later
+consumes) — because no single print carries every contract.
+
+Budgets (expected collective counts per mode) live in the versioned
+``analysis/budgets.json`` next to this package; see :func:`load_budgets`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.analysis import ir
+
+SEVERITIES = ("error", "warning")
+
+
+@dataclasses.dataclass
+class Finding:
+    """One rule violation, locatable to an op when the rule has one."""
+
+    rule: str
+    severity: str                      # "error" | "warning"
+    message: str
+    op: Optional[str] = None
+    computation: Optional[str] = None
+
+    def format(self) -> str:
+        loc = ""
+        if self.computation or self.op:
+            loc = " [%s%s]" % (self.computation or "",
+                               ("/" + self.op) if self.op else "")
+        return f"{self.rule} ({self.severity}){loc}: {self.message}"
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class LintContext:
+    """Everything a rule may inspect for one train-step program.
+
+    ``config`` mirrors the ``make_train_step`` arguments that shape the
+    program, plus derived facts the rules normalize against::
+
+        cross_pod_mode, overlap, deterministic_reduce, zero1,
+        slow_compress_bits, n_buckets, chips_per_pod, grad_bytes
+    """
+
+    optimized: ir.Module               # compiled.as_text()
+    lowered: Optional[ir.Module] = None  # lowered.as_text("hlo")
+    config: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    budget: Optional[Dict[str, Any]] = None
+
+    @property
+    def chips_per_pod(self) -> Optional[int]:
+        v = self.config.get("chips_per_pod")
+        return int(v) if v else None
+
+    @property
+    def n_buckets(self) -> int:
+        return int(self.config.get("n_buckets") or 0)
+
+
+RuleFn = Callable[[LintContext], List[Finding]]
+_RULES: Dict[str, RuleFn] = {}
+
+
+def rule(rule_id: str) -> Callable[[RuleFn], RuleFn]:
+    """Register a lint rule under a stable id (used in findings and
+    ``--only`` filters); re-registration replaces (reload-friendly)."""
+    def deco(fn: RuleFn) -> RuleFn:
+        fn.rule_id = rule_id           # type: ignore[attr-defined]
+        _RULES[rule_id] = fn
+        return fn
+    return deco
+
+
+def all_rules() -> Dict[str, RuleFn]:
+    return dict(_RULES)
+
+
+def run_rules(ctx: LintContext,
+              only: Optional[List[str]] = None) -> List[Finding]:
+    """Run every registered rule (or the ``only`` subset) in id order."""
+    if only is not None:
+        unknown = sorted(set(only) - set(_RULES))
+        if unknown:
+            raise KeyError(f"unknown lint rules {unknown}; "
+                           f"known: {sorted(_RULES)}")
+    out: List[Finding] = []
+    for rid in sorted(_RULES):
+        if only is not None and rid not in only:
+            continue
+        out.extend(_RULES[rid](ctx))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# budgets
+# ---------------------------------------------------------------------------
+
+BUDGETS_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "budgets.json")
+
+
+def load_budgets(path: Optional[str] = None) -> Dict[str, Any]:
+    with open(path or BUDGETS_PATH) as f:
+        budgets = json.load(f)
+    if budgets.get("version") != 1:
+        raise ValueError(
+            f"unsupported budgets.json version {budgets.get('version')!r}")
+    return budgets
+
+
+def budget_for(budgets: Dict[str, Any],
+               cell: str) -> Optional[Dict[str, Any]]:
+    """The budget declaration for one matrix cell (None if undeclared)."""
+    return budgets.get("cells", {}).get(cell)

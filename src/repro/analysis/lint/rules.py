@@ -1,0 +1,267 @@
+"""Built-in lint rules: each one is a bug this repo already shipped.
+
+- ``collective-budget``   — PR 2's zero1 forward double-gathered masters
+  *and* params (2x gather traffic, found by eyeballing profiles).
+- ``deterministic-reduce``— PR 4's missing ``optimization_barrier`` let
+  XLA refold the pinned reduction tree: 1-ulp drift across mesh
+  factorizations, breaking bitwise elastic continuation.
+- ``donation-aliasing``   — PR 4's ``init_bucketed`` master buckets
+  aliased the param buffers they were initialized from; donation then
+  silently dropped and peak memory doubled.
+- ``precision``           — grad/loss accumulation must stay f32+; bf16
+  is only legal on the declared compressed slow hop
+  (``slow_compress_bits=16``).
+- ``overlap-independence``— the overlapped bucket schedule is only
+  legal when slow collectives are data-independent (PR 3's
+  pipelinability invariant, previously checked ad hoc in benchmarks).
+"""
+from __future__ import annotations
+
+from typing import Callable, List
+
+from repro.analysis import hlo, ir
+from repro.analysis.lint.core import Finding, LintContext, rule
+
+_REDUCTIONS = ("all-reduce", "reduce-scatter")
+
+
+def _is_reduction(op: ir.Op) -> bool:
+    return op.collective_kind in _REDUCTIONS and not op.is_async_done
+
+
+def _has_add_apply(mod: ir.Module, op: ir.Op) -> bool:
+    ap = mod.apply_computation(op)
+    return ap is not None and any(o.opcode == "add" for o in ap.ops)
+
+
+def _operand_cone_contains(mod: ir.Module, comp: ir.Computation,
+                           op: ir.Op,
+                           pred: Callable[[ir.Op], bool]) -> bool:
+    """True if ``pred`` holds anywhere in ``op``'s transitive operand
+    cone (within ``comp``, descending into called computations)."""
+    name2op = {o.name: o for o in comp.ops}
+    seen = set()
+    stack = list(op.operands)
+    while stack:
+        nm = stack.pop()
+        if nm in seen:
+            continue
+        seen.add(nm)
+        o = name2op.get(nm)
+        if o is None:
+            continue
+        if pred(o):
+            return True
+        stack.extend(o.operands)
+        for sub in mod.called_computations(o):
+            sc = mod.computations.get(sub)
+            if sc is not None and any(pred(so) for so in sc.ops):
+                return True
+    return False
+
+
+# ---------------------------------------------------------------------------
+# collective-budget
+# ---------------------------------------------------------------------------
+
+@rule("collective-budget")
+def collective_budget(ctx: LintContext) -> List[Finding]:
+    """Trip-weighted per-step collective counts must match the declared
+    budget exactly, and total collective payload must stay under the
+    declared multiple of the gradient bytes (the full-gather tripwire:
+    an accidental param/master gather roughly doubles the payload)."""
+    if not ctx.budget:
+        return []
+    stats = hlo.analyze(ctx.optimized, chips_per_pod=ctx.chips_per_pod)
+    nb = ctx.n_buckets
+    fixed = {k: int(v) for k, v in ctx.budget.get("fixed", {}).items()}
+    per_bucket = {k: int(v)
+                  for k, v in ctx.budget.get("per_bucket", {}).items()}
+    expected = dict(fixed)
+    for k, v in per_bucket.items():
+        expected[k] = expected.get(k, 0) + v * nb
+    findings: List[Finding] = []
+    lines = []
+    for k in sorted(set(expected) | set(stats.collective_ops)):
+        want = expected.get(k, 0)
+        got = stats.collective_ops.get(k, 0)
+        if want == got:
+            continue
+        parts = []
+        if fixed.get(k):
+            parts.append(str(fixed[k]))
+        if per_bucket.get(k):
+            parts.append(f"{per_bucket[k]}/bucket x {nb}")
+        detail = f" ({' + '.join(parts)})" if parts else ""
+        lines.append(f"  {k}: budget {want}{detail}, got {got} "
+                     f"({got - want:+d})")
+    if lines:
+        findings.append(Finding(
+            "collective-budget", "error",
+            "per-step collective counts drifted from "
+            "analysis/budgets.json:\n" + "\n".join(lines)))
+    factor = ctx.budget.get("max_operand_bytes_factor")
+    grad_bytes = ctx.config.get("grad_bytes")
+    if factor and grad_bytes:
+        limit = float(factor) * float(grad_bytes)
+        if stats.collective_operand_bytes > limit:
+            findings.append(Finding(
+                "collective-budget", "error",
+                f"collective payload "
+                f"{stats.collective_operand_bytes / 2**20:.1f} MiB exceeds "
+                f"{factor}x grad bytes "
+                f"({limit / 2**20:.1f} MiB) — an undeclared full gather "
+                f"of params/masters is the usual culprit"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# deterministic-reduce
+# ---------------------------------------------------------------------------
+
+@rule("deterministic-reduce")
+def deterministic_reduce(ctx: LintContext) -> List[Finding]:
+    """``deterministic_reduce=True`` programs may contain **no** raw
+    cross-replica reduction: every reduction is the pinned
+    all-gather + fixed-tree fold, and the fold is sealed behind an
+    ``optimization_barrier`` so XLA cannot refold it (the barrier only
+    exists in the pre-optimization print — the backend consumes it)."""
+    if not ctx.config.get("deterministic_reduce"):
+        return []
+    findings: List[Finding] = []
+    for comp, op in ctx.optimized.ops():
+        if _is_reduction(op):
+            findings.append(Finding(
+                "deterministic-reduce", "error",
+                f"raw {op.collective_kind} in a deterministic program: "
+                f"its reduction order follows the mesh factorization, "
+                f"breaking bitwise elastic continuation (must be the "
+                f"pinned all-gather + tree fold)",
+                op=op.name, computation=comp.name))
+    if ctx.lowered is not None:
+        barriers = [(c, o) for c, o in ctx.lowered.ops()
+                    if o.opcode == "opt-barrier"]
+        if not barriers:
+            findings.append(Finding(
+                "deterministic-reduce", "error",
+                "no optimization_barrier in the lowered program: the "
+                "tree fold is unsealed and XLA may refold it "
+                "(the PR 4 1-ulp drift)"))
+        elif not any(_operand_cone_contains(
+                ctx.lowered, c, o,
+                lambda x: x.collective_kind == "all-gather")
+                for c, o in barriers):
+            findings.append(Finding(
+                "deterministic-reduce", "error",
+                "optimization_barrier present but no all-gather feeds "
+                "it — the gathered tree fold is not the value being "
+                "sealed", op=barriers[0][1].name,
+                computation=barriers[0][0].name))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# donation-aliasing
+# ---------------------------------------------------------------------------
+
+@rule("donation-aliasing")
+def donation_aliasing(ctx: LintContext) -> List[Finding]:
+    """Every entry parameter offered for donation (pre-opt
+    ``buffer_donor``) must be realized as an ``input_output_alias``
+    entry post-opt; a dropped donation means a live use pinned the
+    buffer and peak memory grows by that buffer (PR 4's
+    ``init_bucketed`` masters aliasing the params they were initialized
+    from).  A parameter aliased into two outputs is corrupt either way."""
+    donors = set(ctx.config.get("donated_params") or [])
+    if ctx.lowered is not None:
+        donors |= ctx.lowered.buffer_donors()
+    entries = ctx.optimized.input_output_aliases()
+    findings: List[Finding] = []
+    if donors:
+        aliased = {e.param_number for e in entries}
+        for p in sorted(donors - aliased):
+            findings.append(Finding(
+                "donation-aliasing", "error",
+                f"donated entry parameter {p} escapes unaliased: no "
+                f"input_output_alias entry reuses its buffer, so the "
+                f"donation was silently dropped (a live use of the "
+                f"donated value keeps the old buffer alive)"))
+    seen = {}
+    for e in entries:
+        key = (e.param_number, e.param_index)
+        if key in seen:
+            findings.append(Finding(
+                "donation-aliasing", "error",
+                f"entry parameter {e.param_number} (index "
+                f"{list(e.param_index)}) is aliased into two outputs "
+                f"{list(seen[key])} and {list(e.output_index)} — one of "
+                f"them reads freed memory"))
+        seen[key] = e.output_index
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# precision
+# ---------------------------------------------------------------------------
+
+@rule("precision")
+def precision(ctx: LintContext) -> List[Finding]:
+    """No sub-f32 additive accumulation on cross-replica reduction
+    paths.  The single declared exception: ``slow_compress_bits=16``
+    intentionally runs the *cross-pod* hop in bf16 (int8 compression
+    never trips this — its slow hop is an all-gather + local f32
+    dequant-mean, not a reduction)."""
+    bits = int(ctx.config.get("slow_compress_bits") or 0)
+    cpp = ctx.chips_per_pod
+    findings: List[Finding] = []
+    for comp, op in ctx.optimized.ops():
+        if not _is_reduction(op):
+            continue
+        if not _has_add_apply(ctx.optimized, op):
+            continue                   # min/max/and reductions: not accum
+        bad = sorted(set(d for d in ir.type_dtypes(op.result_type)
+                         if d not in ir.ACCUM_SAFE_DTYPES))
+        if not bad:
+            continue
+        if bits == 16 and cpp and ir.crosses_pod(op, cpp):
+            continue                   # declared bf16 compressed slow hop
+        findings.append(Finding(
+            "precision", "error",
+            f"{op.collective_kind} accumulates in {'/'.join(bad)}: "
+            f"grad/loss reduction paths must accumulate in f32 or wider "
+            f"(bf16 is only legal on the slow hop when "
+            f"slow_compress_bits=16 declares it)",
+            op=op.name, computation=comp.name))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# overlap-independence
+# ---------------------------------------------------------------------------
+
+@rule("overlap-independence")
+def overlap_independence(ctx: LintContext) -> List[Finding]:
+    """``overlap=True`` promises bucket i+1's fast phase runs under
+    bucket i's slow hop — only sound when no slow collective consumes
+    another's result.  Rule-ified ``hlo.slow_collective_chains``."""
+    if not ctx.config.get("overlap"):
+        return []
+    cpp = ctx.chips_per_pod
+    if not cpp:
+        return []
+    ch = hlo.slow_collective_chains(ctx.optimized, chips_per_pod=cpp)
+    findings: List[Finding] = []
+    if not ch.independent:
+        for a, b in ch.dependent_pairs[:8]:
+            findings.append(Finding(
+                "overlap-independence", "error",
+                f"slow collective {b} consumes {a}'s result (max chain "
+                f"depth {ch.max_depth}): the overlapped bucket schedule "
+                f"cannot pipeline a dependent slow hop", op=b))
+    if ch.n_slow == 0:
+        findings.append(Finding(
+            "overlap-independence", "warning",
+            "overlap=True but the program has no cross-pod collectives "
+            "— nothing to overlap (chips_per_pod misdeclared, or the "
+            "mesh has no slow axis)"))
+    return findings

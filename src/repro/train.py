@@ -8,8 +8,11 @@ opt, metrics) function with:
 - cross-pod gradient sync modes (``cross_pod_mode``):
 
   * ``'xla'``         SPMD inserts the minimal sharded all-reduce.
-  * ``'compressed'``  explicit shard_map over 'pod', int8 all-gather on
-                      the slow hop only — 4x fewer DCN bytes.
+  * ``'compressed'``  retired: its partial shard_map (manual 'pod',
+                      auto 'data') fatally aborts XLA under the pinned
+                      jax — multi-pod meshes get a NotImplementedError
+                      pointing at ``hier_bucketed`` +
+                      ``slow_compress_bits=8`` (same int8 slow hop).
   * ``'hier'``        fully-manual per-tensor hierarchical schedule
                       (reduce-scatter fast / psum slow / all-gather
                       fast) — 3 collectives *per leaf*; kept as the
@@ -46,7 +49,6 @@ from repro import optim
 from repro import parallel as PX
 from repro.collectives import bucketing
 from repro.collectives import deterministic as det
-from repro.collectives.compression import compressed_psum_mean
 from repro.collectives.hierarchical import hier_all_reduce_mean
 from repro.data import DataConfig, Prefetcher, SyntheticCorpus
 from repro.elastic import HeartbeatMonitor, StragglerDetector
@@ -483,6 +485,17 @@ def make_train_step(model, ocfg: optim.AdamWConfig, *, accum: int = 1,
             "deterministic_reduce has no two-tier pipeline to overlap; "
             "pick one of overlap / deterministic_reduce")
     mesh = rules.mesh if rules is not None else None
+    if (cross_pod_mode == "compressed" and mesh is not None
+            and "pod" in mesh.axis_names and mesh.shape["pod"] > 1):
+        # the partial shard_map (manual 'pod', auto 'data') this mode
+        # used fatally aborts XLA on (pod, data) meshes under the pinned
+        # jax 0.4.37; the bucketed modes subsume it (same int8 slow hop,
+        # fewer collectives), so the mode is a clear error, not a crash
+        raise NotImplementedError(
+            "cross_pod_mode='compressed' is not supported on multi-pod "
+            "meshes (XLA aborts on its partial shard_map under the "
+            "pinned jax); use cross_pod_mode='hier_bucketed' with "
+            "slow_compress_bits=8 for the int8 cross-pod hop")
     if cross_pod_mode in MANUAL_SYNC_MODES:
         return _make_manual_sync_step(
             model, ocfg, accum=accum, rules=rules, mode=cross_pod_mode,
@@ -491,38 +504,9 @@ def make_train_step(model, ocfg: optim.AdamWConfig, *, accum: int = 1,
             slow_error_feedback=slow_error_feedback,
             deterministic_reduce=deterministic_reduce)
     lg = make_loss_and_grad(model, accum=accum)
-    has_pod = mesh is not None and "pod" in mesh.axis_names
 
     def base_step(params, opt_state, batch):
-        if cross_pod_mode == "compressed" and has_pod:
-            n_pods = mesh.shape["pod"]
-            from repro.sharding import use_rules, without_axes
-            inner_rules = (without_axes(rules, frozenset({"pod"}))
-                           if rules is not None else None)
-
-            def per_pod(params, batch):
-                batch = {k: v[0] for k, v in batch.items()}  # strip pod dim
-                with use_rules(inner_rules):  # 'pod' is manual in here
-                    loss, grads = lg(params, batch)
-                grads = jax.tree.map(
-                    lambda g: compressed_psum_mean(g, "pod", bits=8),
-                    grads)
-                return PX.psum(loss, "pod") / n_pods, grads
-
-            # an explicit leading pod dim keeps the manual 'pod' axis off
-            # dims that are auto-sharded over 'data'
-            batch_p = {k: v.reshape((n_pods, v.shape[0] // n_pods)
-                                    + v.shape[1:])
-                       for k, v in batch.items()}
-            loss, grads = PX.shard_map(
-                per_pod, mesh=mesh,
-                in_specs=(jax.tree.map(lambda _: P(), params),
-                          jax.tree.map(lambda _: P("pod"), batch_p)),
-                out_specs=(P(), jax.tree.map(lambda _: P(), params)),
-                check_vma=False, axis_names={"pod"},
-            )(params, batch_p)
-        else:
-            loss, grads = lg(params, batch)
+        loss, grads = lg(params, batch)
         params, opt_state, om = optim.apply(ocfg, params, grads, opt_state)
         metrics = {"loss": loss, **om}
         return params, opt_state, metrics
@@ -555,6 +539,130 @@ def make_jitted_train_step(model, ocfg, *, accum, rules,
                               batch_sharding)
         kw["out_shardings"] = (param_shardings, opt_shardings, None)
     return jax.jit(wrapped, donate_argnums=(0, 1), **kw)
+
+
+def wrap_ef_state(params, opt_state, opt_shardings, mesh, *,
+                  bucket_bytes: int = bucketing.DEFAULT_BUCKET_BYTES,
+                  deterministic: bool = False):
+    """Wrap an optimizer state (and its shardings, when sharded) with
+    zero error-feedback residuals for ``slow_error_feedback=True``."""
+    res = init_slow_residuals(params, mesh, bucket_bytes=bucket_bytes,
+                              deterministic=deterministic)
+    fast_axis, slow_axis = grad_sync_axes(mesh)
+    if mesh is not None and (fast_axis or slow_axis):
+        rshard = NamedSharding(mesh, _residual_spec(fast_axis, slow_axis))
+        res = tuple(jax.device_put(r, rshard) for r in res)
+        if opt_shardings is not None:
+            opt_shardings = EFState(opt_shardings, (rshard,) * len(res))
+    return EFState(opt_state, res), opt_shardings
+
+
+def init_train_state(model, ocfg: optim.AdamWConfig, *,
+                     rules: Optional[MeshRules] = None, seed: int = 0,
+                     cross_pod_mode: str = "xla",
+                     bucket_bytes: int = bucketing.DEFAULT_BUCKET_BYTES,
+                     slow_error_feedback: bool = False,
+                     deterministic_reduce: bool = False):
+    """Initial ``(params, opt_state, opt_shardings, layout)`` for a mode.
+
+    The single state construction the Trainer, the HLO lint matrix
+    (``train_step_hlo``) and the benches share, so the state/layout a
+    step function expects cannot drift from what callers build:
+    ``hier_bucketed_zero1`` needs the fast-axis-sharded
+    :class:`~repro.optim.BucketedOptState` over the *same*
+    ``(bucket_bytes, deterministic)`` layout the step derives, and
+    ``slow_error_feedback`` wraps it in an :class:`EFState`.
+    ``opt_shardings``/``layout`` are None outside the zero1 mode.
+    """
+    params = model.init(jax.random.key(seed))
+    mesh = rules.mesh if rules is not None else None
+    opt_shardings = None
+    layout = None
+    if cross_pod_mode == "hier_bucketed_zero1":
+        layout = make_bucket_layout(params, mesh,
+                                    bucket_bytes=bucket_bytes,
+                                    deterministic=deterministic_reduce)
+        opt_state, opt_shardings = init_sharded_zero1(
+            ocfg, params, layout, mesh)
+    else:
+        opt_state = optim.init(ocfg, params)
+    if slow_error_feedback:
+        opt_state, opt_shardings = wrap_ef_state(
+            params, opt_state, opt_shardings, mesh,
+            bucket_bytes=bucket_bytes,
+            deterministic=deterministic_reduce)
+    return params, opt_state, opt_shardings, layout
+
+
+# ---------------------------------------------------------------------------
+# static-analysis hooks
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TrainStepHlo:
+    """Both textual HLO dialects of one lowered+compiled train step.
+
+    No single print carries every statically checkable contract, so the
+    lint rules get both: ``lowered_text`` (``lowered.as_text("hlo")``,
+    pre-optimization) holds the ``buffer_donor`` donation offers and the
+    ``opt-barrier`` ops the backend consumes before scheduling;
+    ``compiled_text`` (``compiled.as_text()``, post-optimization) holds
+    the realized ``input_output_alias`` pairs, the scheduled collective
+    mix and ``known_trip_count`` loop annotations.
+    """
+
+    lowered_text: str
+    compiled_text: str
+    n_buckets: int                 # 0 for the non-bucketed modes
+    donated_args: int              # leaves in the donated (params, opt)
+    grad_bytes: int                # total f32 gradient bytes per step
+
+
+def train_step_hlo(model, ocfg: optim.AdamWConfig, *, rules: MeshRules,
+                   accum: int = 1, seed: int = 0, batch_size: int = 8,
+                   seq_len: int = 16, cross_pod_mode: str = "xla",
+                   bucket_bytes: int = bucketing.DEFAULT_BUCKET_BYTES,
+                   slow_compress_bits: int = 0, overlap: bool = False,
+                   slow_error_feedback: bool = False,
+                   deterministic_reduce: bool = False) -> TrainStepHlo:
+    """Lower + compile one train step and return its HLO (both dialects).
+
+    The hook behind ``scripts/lint_hlo.py``: builds the real initial
+    state via :func:`init_train_state` (so the lowered program is the
+    one training runs, donation and all) on a synthetic tokens/targets
+    batch, and captures the pre- and post-optimization prints.
+    """
+    params, opt_state, _, layout = init_train_state(
+        model, ocfg, rules=rules, seed=seed,
+        cross_pod_mode=cross_pod_mode, bucket_bytes=bucket_bytes,
+        slow_error_feedback=slow_error_feedback,
+        deterministic_reduce=deterministic_reduce)
+    mesh = rules.mesh if rules is not None else None
+    if layout is None and cross_pod_mode in BUCKETED_SYNC_MODES:
+        layout = make_bucket_layout(params, mesh,
+                                    bucket_bytes=bucket_bytes,
+                                    deterministic=deterministic_reduce)
+    batch = {"tokens": jnp.zeros((batch_size, seq_len), jnp.int32),
+             "targets": jnp.zeros((batch_size, seq_len), jnp.int32)}
+    step = make_jitted_train_step(
+        model, ocfg, accum=accum, rules=rules,
+        cross_pod_mode=cross_pod_mode, bucket_bytes=bucket_bytes,
+        slow_compress_bits=slow_compress_bits, overlap=overlap,
+        slow_error_feedback=slow_error_feedback,
+        deterministic_reduce=deterministic_reduce)
+    if mesh is not None:
+        with mesh:
+            lowered = step.lower(params, opt_state, batch)
+    else:
+        lowered = step.lower(params, opt_state, batch)
+    compiled = lowered.compile()
+    return TrainStepHlo(
+        lowered_text=lowered.as_text("hlo"),
+        compiled_text=compiled.as_text(),
+        n_buckets=layout.n_buckets if layout is not None else 0,
+        donated_args=len(jax.tree.leaves((params, opt_state))),
+        grad_bytes=sum(4 * int(np.prod(p.shape))
+                       for p in jax.tree.leaves(params)))
 
 
 # ---------------------------------------------------------------------------
@@ -605,37 +713,14 @@ class Trainer:
             deterministic_reduce=tcfg.deterministic_reduce)
         self.history: list = []
 
-    def _wrap_ef(self, params, opt_state, mesh):
-        """Wrap the optimizer state with sharded zero EF residuals."""
-        res = init_slow_residuals(
-            params, mesh, bucket_bytes=self.tcfg.bucket_bytes,
-            deterministic=self.tcfg.deterministic_reduce)
-        fast_axis, slow_axis = grad_sync_axes(mesh)
-        if mesh is not None and (fast_axis or slow_axis):
-            rshard = NamedSharding(mesh,
-                                   _residual_spec(fast_axis, slow_axis))
-            res = tuple(jax.device_put(r, rshard) for r in res)
-            if self._opt_shardings is not None:
-                self._opt_shardings = EFState(self._opt_shardings,
-                                              (rshard,) * len(res))
-        return EFState(opt_state, res)
-
     def _init_state(self, seed: int = 0):
-        params = self.model.init(jax.random.key(seed))
-        self._opt_shardings = None
-        self._layout = None
-        mesh = self.rules.mesh if self.rules is not None else None
-        if self.tcfg.cross_pod_mode == "hier_bucketed_zero1":
-            layout = make_bucket_layout(
-                params, mesh, bucket_bytes=self.tcfg.bucket_bytes,
-                deterministic=self.tcfg.deterministic_reduce)
-            self._layout = layout
-            opt_state, self._opt_shardings = init_sharded_zero1(
-                self.ocfg, params, layout, mesh)
-        else:
-            opt_state = optim.init(self.ocfg, params)
-        if self.tcfg.slow_error_feedback:
-            return params, self._wrap_ef(params, opt_state, mesh)
+        params, opt_state, self._opt_shardings, self._layout = \
+            init_train_state(
+                self.model, self.ocfg, rules=self.rules, seed=seed,
+                cross_pod_mode=self.tcfg.cross_pod_mode,
+                bucket_bytes=self.tcfg.bucket_bytes,
+                slow_error_feedback=self.tcfg.slow_error_feedback,
+                deterministic_reduce=self.tcfg.deterministic_reduce)
         return params, opt_state
 
     def run(self, *, seed: int = 0, resume: bool = True
