@@ -1,0 +1,262 @@
+"""Fault-tolerance benchmark: recovery micro-costs + failures-at-scale.
+
+Two stages, both host-side (no device mesh needed):
+
+1. **Recovery micro-bench**: a real two-commit sharded checkpoint
+   history has its newest shard bit-flipped; ``restore_with_fallback``
+   must quarantine it on disk and restore the previous committed step.
+   The wallclock of the clean restore, the corrupt-detect+fallback
+   cycle, and a transient-EIO retried restore are measured on the
+   Table-1-shaped state.
+
+2. **Failure replay**: the fig7 trace categories replay under DM with a
+   seeded MTBF :class:`~repro.core.simulator.FailureModel` armed, once
+   with the drain cost model and once with the handoff model.  Failures
+   strike the *same* seeded sequence in both, so the per-run restart
+   charge is directly comparable — the paper's claim is that
+   software-coordinated handoff makes unplanned recovery no more
+   expensive than the incumbent reload (``failure_restart_s`` min-caps
+   at the drain constant), while goodput accounting surfaces the lost
+   work that checkpoint cadence, not recovery mechanism, governs.
+
+Writes ``BENCH_fault.json`` (checked by ``scripts/check_bench.py`` in
+CI) and emits the usual ``name,us,derived`` CSV rows.  Deterministic
+for a fixed seed: run twice, byte-identical JSON.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+DEFAULT_OUT = os.path.join(REPO, "BENCH_fault.json")
+
+MTBF_S = 3 * 3600.0
+CKPT_INTERVAL_S = 600.0
+
+FAILURE_TRACES = (
+    ("fig7_philly_balanced_train_fifo", "philly", "balanced", "train",
+     "fifo"),
+    ("fig7_philly_small_train_fifo", "philly", "small", "train",
+     "fifo"),
+)
+
+
+def _state_tree(n_leaves: int, leaf_elems: int) -> dict:
+    rng = np.random.default_rng(0)
+    return {f"p{i:03d}": rng.standard_normal(leaf_elems)
+            .astype(np.float32) for i in range(n_leaves)}
+
+
+def _recovery_bench(quick: bool) -> dict:
+    """Stage 1: corrupt-quarantine-fallback on a real shard history."""
+    from repro import ckpt as ckpt_lib
+    from repro.faults import FaultPlan, FaultSpec, RetryPolicy, install
+    from repro.faults.recovery import restore_with_fallback
+
+    n_leaves, leaf_elems = (8, 1 << 12) if quick else (32, 1 << 16)
+    tree = _state_tree(n_leaves, leaf_elems)
+    base = tempfile.mkdtemp(prefix="fault_bench_")
+    try:
+        for step in (10, 20):
+            ckpt_lib.save_sharded(ckpt_lib.step_dir(base, step), step,
+                                  tree)
+
+        t0 = time.perf_counter()
+        step, _, _ = restore_with_fallback(base, tree)
+        clean_restore_s = time.perf_counter() - t0
+        clean_ok = step == 20
+
+        # flip payload bytes of one shard of the newest commit
+        sdir = ckpt_lib.step_dir(base, 20)
+        shard = sorted(f for f in os.listdir(sdir)
+                       if f.endswith(".npy"))[0]
+        with open(os.path.join(sdir, shard), "r+b") as f:
+            f.seek(-8, os.SEEK_END)
+            tail = f.read(8)
+            f.seek(-8, os.SEEK_END)
+            f.write(bytes(b ^ 0xFF for b in tail))
+
+        t0 = time.perf_counter()
+        step, restored, report = restore_with_fallback(base, tree)
+        fallback_s = time.perf_counter() - t0
+        fallback_ok = (
+            step == 10 and report.fell_back
+            and [q.step for q in report.quarantined] == [20]
+            and report.quarantined[0].quarantined_to is not None
+            and not os.path.isdir(sdir)
+            and all(np.array_equal(restored[k], tree[k]) for k in tree))
+
+        # transient EIO on the first read, absorbed by one retry
+        plan = FaultPlan([FaultSpec("sharded.read", "eio", hit=1)])
+        t0 = time.perf_counter()
+        with install(plan):
+            step, _, rep = restore_with_fallback(
+                base, tree,
+                retry=RetryPolicy(max_retries=1, base_delay_s=0.001))
+        retry_restore_s = time.perf_counter() - t0
+        retry_ok = (step == 10 and bool(plan.fired)
+                    and not rep.quarantined)
+    finally:
+        shutil.rmtree(base, ignore_errors=True)
+
+    state_bytes = sum(a.nbytes for a in tree.values())
+    return {
+        "n_leaves": n_leaves,
+        "state_bytes": state_bytes,
+        "clean_restore_s": clean_restore_s,
+        "corrupt_fallback_s": fallback_s,
+        "retry_restore_s": retry_restore_s,
+        "clean_ok": bool(clean_ok),
+        "fallback_ok": bool(fallback_ok),
+        "retry_ok": bool(retry_ok),
+    }
+
+
+def _one_replay(label, src, size_dist, mix, policy, mode, seed):
+    from repro.core.jct_model import ReconfigCostModel
+    from repro.core.simulator import FailureModel, simulate
+    from repro.core.traces import TraceCategory, generate_trace
+
+    jobs = generate_trace(TraceCategory(src, size_dist, mix),
+                          seed=seed, double=False, max_size=4)
+    r = simulate(jobs, "DM", policy=policy, seed=seed,
+                 reconfig_cost=ReconfigCostModel(mode=mode),
+                 failure_model=FailureModel(
+                     mtbf_s=MTBF_S, ckpt_interval_s=CKPT_INTERVAL_S))
+    return len(jobs), r
+
+
+def _failure_replay(quick: bool) -> dict:
+    """Stage 2: drain vs handoff recovery pricing under seeded MTBF."""
+    seeds = (0,) if quick else (0, 1, 2)
+    out = {"mtbf_s": MTBF_S, "ckpt_interval_s": CKPT_INTERVAL_S}
+    per_trace = {}
+    totals = {"drain": 0.0, "handoff": 0.0}
+    recoveries = {"drain": 0, "handoff": 0}
+    n_failures_total = 0
+    all_finished = True
+    same_failure_seq = True
+    goodput_degrades = True
+    for label, src, size_dist, mix, policy in FAILURE_TRACES:
+        rows = []
+        for seed in seeds:
+            n_jobs, drain = _one_replay(label, src, size_dist, mix,
+                                        policy, "drain", seed)
+            _, hand = _one_replay(label, src, size_dist, mix,
+                                  policy, "handoff", seed)
+            all_finished &= (drain.n_jobs == n_jobs
+                             and hand.n_jobs == n_jobs)
+            same_failure_seq &= drain.n_failures == hand.n_failures
+            goodput_degrades &= (drain.n_failures == 0
+                                 or drain.goodput < 1.0)
+            n_failures_total += drain.n_failures
+            totals["drain"] += drain.failure_restart_cost_s
+            totals["handoff"] += hand.failure_restart_cost_s
+            recoveries["drain"] += drain.n_recoveries
+            recoveries["handoff"] += hand.n_recoveries
+            rows.append({
+                "seed": seed,
+                "n_jobs": n_jobs,
+                "n_failures": drain.n_failures,
+                "n_recoveries": drain.n_recoveries,
+                "handoff_n_recoveries": hand.n_recoveries,
+                "lost_work_s": drain.failure_lost_work_s,
+                "drain_restart_cost_s": drain.failure_restart_cost_s,
+                "handoff_restart_cost_s": hand.failure_restart_cost_s,
+                "drain_goodput": drain.goodput,
+                "handoff_goodput": hand.goodput,
+                "drain_makespan": drain.makespan,
+                "handoff_makespan": hand.makespan,
+            })
+        per_trace[label] = {"runs": rows}
+    out["traces"] = per_trace
+    out["drain_restart_cost_s"] = totals["drain"]
+    out["handoff_restart_cost_s"] = totals["handoff"]
+    out["drain_n_recoveries"] = recoveries["drain"]
+    out["handoff_n_recoveries"] = recoveries["handoff"]
+    # per-recovery means: restart-charge magnitudes shift the schedule,
+    # so the *number* of jobs a given failure strikes can differ between
+    # modes — the comparable quantity is the price of one recovery, on
+    # which failure_restart_s caps handoff at the drain constant
+    out["drain_restart_mean_s"] = (
+        totals["drain"] / max(recoveries["drain"], 1))
+    out["handoff_restart_mean_s"] = (
+        totals["handoff"] / max(recoveries["handoff"], 1))
+    out["n_failures_total"] = n_failures_total
+    out["all_jobs_finished"] = bool(all_finished)
+    out["same_failure_sequence"] = bool(same_failure_seq)
+    out["goodput_degrades"] = bool(goodput_degrades)
+    return out
+
+
+def main(quick: bool = False, out_path: str = DEFAULT_OUT) -> None:
+    from benchmarks.common import emit
+
+    recovery = _recovery_bench(quick)
+    replay = _failure_replay(quick)
+
+    # determinism is part of the contract: the replay stage re-run with
+    # the same seeds must reproduce byte-identical numbers (the recovery
+    # stage measures wallclock, which legitimately varies)
+    replay_again = _failure_replay(quick)
+    deterministic = json.dumps(replay, sort_keys=True) == \
+        json.dumps(replay_again, sort_keys=True)
+
+    acceptance = {
+        "recovery_clean_ok": recovery["clean_ok"],
+        "recovery_fallback_ok": recovery["fallback_ok"],
+        "recovery_retry_ok": recovery["retry_ok"],
+        "failures_struck": replay["n_failures_total"] > 0,
+        "all_jobs_finished": replay["all_jobs_finished"],
+        "same_failure_sequence": replay["same_failure_sequence"],
+        "goodput_degrades": replay["goodput_degrades"],
+        # the pricing claim: one unplanned handoff recovery never costs
+        # more than the incumbent drain reload (failure_restart_s
+        # min-caps at the drain constant); totals are not comparable —
+        # see the *_restart_mean_s comment in the replay section
+        "handoff_recovery_le_drain": bool(
+            replay["handoff_restart_mean_s"]
+            <= replay["drain_restart_mean_s"] + 1e-9),
+        "deterministic_replay": bool(deterministic),
+    }
+    acceptance["pass"] = all(v for v in acceptance.values()
+                             if isinstance(v, bool))
+
+    out = {
+        "quick": quick,
+        "recovery": recovery,
+        "replay": replay,
+        "acceptance": acceptance,
+    }
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=2)
+
+    emit("fault_recovery_clean_restore",
+         recovery["clean_restore_s"] * 1e6,
+         f"state={recovery['state_bytes']};ok={recovery['clean_ok']}")
+    emit("fault_recovery_corrupt_fallback",
+         recovery["corrupt_fallback_s"] * 1e6,
+         f"quarantine+fallback;ok={recovery['fallback_ok']}")
+    emit("fault_recovery_transient_retry",
+         recovery["retry_restore_s"] * 1e6,
+         f"eio_retried;ok={recovery['retry_ok']}")
+    emit("fault_replay", 0.0,
+         f"n_failures={replay['n_failures_total']};"
+         f"drain_restart_mean={replay['drain_restart_mean_s']:.2f}s;"
+         f"handoff_restart_mean={replay['handoff_restart_mean_s']:.2f}s;"
+         f"pass={acceptance['pass']}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+    main(args.quick, args.out)

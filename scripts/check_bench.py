@@ -30,6 +30,7 @@ REQUIRED_KEYS = {
     "BENCH_ckpt.json": ("accounting", "wallclock", "acceptance"),
     "BENCH_elastic.json": ("measurements", "cost_model", "replay",
                            "acceptance"),
+    "BENCH_fault.json": ("recovery", "replay", "acceptance"),
 }
 
 

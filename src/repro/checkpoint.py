@@ -16,11 +16,13 @@ import os
 import re
 import threading
 import zlib
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import ml_dtypes  # noqa: F401  (registers bfloat16 etc. with numpy)
 import numpy as np
+
+from repro.faults.plan import maybe_fire
 
 
 def _leaf_paths(tree) -> Dict[str, Any]:
@@ -50,6 +52,7 @@ def save(ckpt_dir: str, step: int, tree, *, blocking: bool = True
         manifest = {"step": step, "leaves": {}}
         for k, arr in host.items():
             fname = _sanitize(k) + ".npy"
+            maybe_fire("legacy.write")
             np.save(os.path.join(ckpt_dir, fname), arr)
             manifest["leaves"][k] = {
                 "file": fname,
@@ -60,6 +63,7 @@ def save(ckpt_dir: str, step: int, tree, *, blocking: bool = True
         tmp = os.path.join(ckpt_dir, "manifest.json.tmp")
         with open(tmp, "w") as f:
             json.dump(manifest, f, indent=1)
+        maybe_fire("legacy.manifest", path=tmp)
         os.replace(tmp, os.path.join(ckpt_dir, "manifest.json"))
 
     if blocking:
@@ -124,7 +128,9 @@ def restore(ckpt_dir: str, template, *, shardings=None,
         meta = manifest["leaves"].get(k)
         if meta is None:
             raise CorruptCheckpointError(f"missing leaf {k}")
-        arr = np.load(os.path.join(ckpt_dir, meta["file"]))
+        leaf_path = os.path.join(ckpt_dir, meta["file"])
+        maybe_fire("legacy.read", path=leaf_path)
+        arr = np.load(leaf_path)
         want = np.dtype(meta["dtype"])
         if arr.dtype != want:     # np.save round-trips bf16 as void16
             arr = arr.view(want)
@@ -161,25 +167,44 @@ def restore(ckpt_dir: str, template, *, shardings=None,
 _STEP_DIR_RE = re.compile(r"^step_(\d+)$")
 
 
-def latest_step(base_dir: str) -> Optional[int]:
-    """Largest *committed* step in ``base_dir``.
+def committed_steps(base_dir: str) -> List[int]:
+    """All *committed* steps in ``base_dir``, sorted ascending.
 
     A step dir counts only if its name matches ``step_<digits>`` exactly
-    AND it contains a manifest — the commit marker both checkpoint
-    formats write last.  Partially-written dirs (crash mid-save, torn
-    temp dirs awaiting their atomic rename) are ignored, never raised on:
-    a restart after a mid-checkpoint crash must resume from the previous
-    good step, not die enumerating the wreckage.
+    AND it contains a manifest that parses as JSON whose ``step`` equals
+    the directory's digits — the commit marker both checkpoint formats
+    write last, verified rather than merely present.  Partially-written
+    dirs (crash mid-save, torn temp dirs awaiting their atomic rename,
+    a manifest whose write was itself torn) are ignored, never raised
+    on: a restart after a mid-checkpoint crash must resume from the
+    previous good step, not die enumerating the wreckage.
+
+    This is the history the CRC-quarantine fallback walks newest-first
+    (``repro.faults.recovery``) and the driver restart path replays
+    against its event schedule.
     """
     if not os.path.isdir(base_dir):
-        return None
+        return []
     steps = []
     for d in os.listdir(base_dir):
         m = _STEP_DIR_RE.match(d)
-        if m and os.path.exists(
-                os.path.join(base_dir, d, "manifest.json")):
+        if not m:
+            continue
+        man_path = os.path.join(base_dir, d, "manifest.json")
+        try:
+            with open(man_path) as f:
+                man = json.load(f)
+        except (OSError, ValueError):
+            continue
+        if isinstance(man, dict) and man.get("step") == int(m.group(1)):
             steps.append(int(m.group(1)))
-    return max(steps) if steps else None
+    return sorted(steps)
+
+
+def latest_step(base_dir: str) -> Optional[int]:
+    """Largest committed step in ``base_dir`` (see ``committed_steps``)."""
+    steps = committed_steps(base_dir)
+    return steps[-1] if steps else None
 
 
 def step_dir(base_dir: str, step: int) -> str:

@@ -14,26 +14,34 @@ Public API:
 - :func:`restore_auto` — format dispatch (legacy per-leaf dirs keep
   restoring);
 - :class:`ShardedCheckpoint` — range-level reader (reshard arithmetic);
-- :func:`latest_step` / :func:`step_dir` — step-dir bookkeeping, shared
-  with (and crash-safe against) the legacy format;
+- :func:`latest_step` / :func:`committed_steps` / :func:`step_dir` —
+  step-dir bookkeeping (full manifest-verified history), shared with
+  (and crash-safe against) the legacy format;
+- :func:`gc_debris` — dead-writer ``.tmp-*``/``.old-*`` sweep (also run
+  automatically by every successful :func:`save_sharded`);
 - restore policies :data:`EXACT` / :data:`PAD_FLAT` / :data:`ZERO`.
+
+Fault-injection points and retry/fallback recovery live in
+:mod:`repro.faults` (``restore_with_fallback`` wraps
+:func:`restore_auto` with the committed-history quarantine walk).
 
 The legacy gathered per-leaf format lives on in :mod:`repro.checkpoint`
 for small replicated states and old checkpoints.
 """
-from repro.checkpoint import (CorruptCheckpointError, latest_step,
-                              step_dir)
+from repro.checkpoint import (CorruptCheckpointError, committed_steps,
+                              latest_step, step_dir)
 from repro.ckpt.manifest import (FORMAT, MANIFEST, VERSION, LeafEntry,
                                  Manifest, ManifestError, ShardFile,
                                  bucket_live_sizes, is_sharded_dir,
                                  read_manifest)
 from repro.ckpt.sharded import (EXACT, PAD_FLAT, ZERO, ShardedCheckpoint,
-                                restore_auto, restore_sharded,
+                                gc_debris, restore_auto, restore_sharded,
                                 save_sharded)
 from repro.ckpt.treepaths import leaf_paths, rebuild, sanitize
 
 __all__ = [
-    "CorruptCheckpointError", "latest_step", "step_dir",
+    "CorruptCheckpointError", "committed_steps", "latest_step",
+    "step_dir", "gc_debris",
     "FORMAT", "MANIFEST", "VERSION", "LeafEntry", "Manifest",
     "ManifestError", "ShardFile", "bucket_live_sizes", "is_sharded_dir",
     "read_manifest",

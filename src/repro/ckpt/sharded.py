@@ -22,6 +22,7 @@ everything past the layout's live prefix is zeros on both sides.
 from __future__ import annotations
 
 import os
+import re
 import shutil
 import threading
 import zlib
@@ -34,6 +35,8 @@ import numpy as np
 from repro.checkpoint import CorruptCheckpointError, _WriterThread
 from repro.ckpt import manifest as mf
 from repro.ckpt.treepaths import leaf_paths, rebuild, sanitize
+from repro.faults.plan import maybe_fire
+from repro.faults.retry import NO_RETRY, RetryPolicy
 
 # restore policies (per leaf, via a same-structure policy tree):
 EXACT = "exact"          # shapes must match the manifest (default)
@@ -56,8 +59,53 @@ def _box_shape(box) -> Tuple[int, ...]:
     return tuple(b - a for a, b in box)
 
 
+# rename-protocol debris: in-flight temp dirs and moved-aside old commits,
+# both tagged with the writing pid.  Quarantined dirs (".quarantined-*")
+# deliberately do NOT match — they are evidence, not garbage.
+_DEBRIS_RE = re.compile(r"^step_\d+\.(?:tmp|old)-(\d+)$")
+
+
+def _pid_alive(pid: int) -> bool:
+    if pid == os.getpid():
+        return True
+    try:
+        os.kill(pid, 0)
+    except ProcessLookupError:
+        return False
+    except OSError:
+        return True        # exists but not ours / indeterminate: keep it
+    return True
+
+
+def gc_debris(base_dir: str) -> list:
+    """Remove rename-protocol leftovers whose writer is dead.
+
+    A crash between the same-step rename-aside and the commit rename
+    strands a ``.old-<pid>`` dir forever (its name fails the committed
+    regex, so nothing ever looks at it again); a crash mid-write strands
+    ``.tmp-<pid>``.  Each successful save sweeps its base dir for such
+    debris from *dead* pids — a live pid may be another writer mid-save
+    on a shared filesystem, so its dirs are left alone.  Returns the
+    paths removed.
+    """
+    try:
+        names = os.listdir(base_dir)
+    except OSError:
+        return []
+    removed = []
+    for name in sorted(names):
+        m = _DEBRIS_RE.match(name)
+        if not m or _pid_alive(int(m.group(1))):
+            continue
+        path = os.path.join(base_dir, name)
+        shutil.rmtree(path, ignore_errors=True)
+        removed.append(path)
+    return removed
+
+
 def save_sharded(ckpt_dir: str, step: int, tree, *, layout=None,
-                 mesh=None, blocking: bool = True
+                 mesh=None, blocking: bool = True,
+                 retry: RetryPolicy = NO_RETRY
                  ) -> Optional[threading.Thread]:
     """Save ``tree`` in the sharded per-rank format.
 
@@ -65,7 +113,10 @@ def save_sharded(ckpt_dir: str, step: int, tree, *, layout=None,
     for reshard bookkeeping; ``mesh`` records provenance.  With
     ``blocking=False`` the device->host copies happen synchronously but
     file writes run on the returned daemon thread (join it before the
-    next save).
+    next save).  ``retry`` bounds transient-I/O retries: the whole write
+    protocol is idempotent up to the commit rename (the temp dir is
+    rebuilt from the already-captured host arrays), so a retried attempt
+    restarts it from scratch.
 
     Single-process note: every addressable shard is written by this
     process; in a true multi-host deployment each host writes the shards
@@ -123,27 +174,40 @@ def save_sharded(ckpt_dir: str, step: int, tree, *, layout=None,
     tmp = f"{ckpt_dir}.tmp-{os.getpid()}"
     old = f"{ckpt_dir}.old-{os.getpid()}"
 
-    def write():
+    def write_once():
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
         os.makedirs(tmp)
         for fname, arr in payload:
-            np.save(os.path.join(tmp, fname), arr)
-        with open(os.path.join(tmp, mf.MANIFEST), "w") as f:
+            fpath = os.path.join(tmp, fname)
+            maybe_fire("sharded.write")
+            np.save(fpath, arr)
+            maybe_fire("sharded.written", path=fpath)
+        man_path = os.path.join(tmp, mf.MANIFEST)
+        with open(man_path, "w") as f:
             f.write(man.to_json())               # commit marker, last
+        maybe_fire("sharded.manifest", path=man_path)
         if os.path.exists(ckpt_dir):
             # re-save of the same step: move the old commit ASIDE, never
             # rmtree it pre-commit — deleting first would leave a crash
             # window in which the only committed checkpoint is destroyed
             # irrecoverably.  A crash between the two renames still
             # hides this step from latest_step (the .old-* name fails
-            # its regex, resume falls back to an earlier step), but the
-            # bytes survive on disk for manual recovery.
+            # its regex, resume falls back to an earlier step); the
+            # bytes survive on disk until the next successful save's
+            # debris sweep (gc_debris) collects them.
+            maybe_fire("sharded.pre_rename_aside")
             if os.path.exists(old):
                 shutil.rmtree(old)
             os.rename(ckpt_dir, old)
+            maybe_fire("sharded.between_renames")
         os.rename(tmp, ckpt_dir)                 # atomic commit
+        maybe_fire("sharded.committed")
         shutil.rmtree(old, ignore_errors=True)
+        gc_debris(os.path.dirname(ckpt_dir) or ".")
+
+    def write():
+        retry.call(write_once)
 
     if blocking:
         write()
@@ -156,10 +220,12 @@ def save_sharded(ckpt_dir: str, step: int, tree, *, layout=None,
 class ShardedCheckpoint:
     """Reader for one committed sharded checkpoint directory."""
 
-    def __init__(self, ckpt_dir: str, *, verify: bool = True):
+    def __init__(self, ckpt_dir: str, *, verify: bool = True,
+                 retry: RetryPolicy = NO_RETRY):
         self.dir = ckpt_dir
         self.manifest = mf.read_manifest(ckpt_dir)
         self.verify = verify
+        self.retry = retry
         # restore walks target shards in order, so consecutive reads
         # usually hit the same saved file: keep exactly one file hot (a
         # full cache would hold the whole state in host RAM, the thing
@@ -178,7 +244,13 @@ class ShardedCheckpoint:
                    dtype: np.dtype) -> np.ndarray:
         if self._hot[0] == fname:
             return self._hot[1]
-        arr = np.load(os.path.join(self.dir, fname))
+        fpath = os.path.join(self.dir, fname)
+
+        def load():
+            maybe_fire("sharded.read", path=fpath)
+            return np.load(fpath)
+
+        arr = self.retry.call(load)
         if arr.dtype != dtype:        # np.save round-trips bf16 as void16
             arr = arr.view(dtype)
         if (self.verify and crc is not None
@@ -365,14 +437,16 @@ class ShardedCheckpoint:
 
 
 def restore_sharded(ckpt_dir: str, template, *, shardings=None,
-                    policy=None, layout=None, verify: bool = True
-                    ) -> Tuple[int, Any]:
-    return ShardedCheckpoint(ckpt_dir, verify=verify).restore(
+                    policy=None, layout=None, verify: bool = True,
+                    retry: RetryPolicy = NO_RETRY) -> Tuple[int, Any]:
+    return ShardedCheckpoint(ckpt_dir, verify=verify,
+                             retry=retry).restore(
         template, shardings=shardings, policy=policy, layout=layout)
 
 
 def restore_auto(ckpt_dir: str, template, *, shardings=None, policy=None,
-                 layout=None, verify: bool = True) -> Tuple[int, Any]:
+                 layout=None, verify: bool = True,
+                 retry: RetryPolicy = NO_RETRY) -> Tuple[int, Any]:
     """Dispatch on the on-disk format: sharded manifest or legacy
     per-leaf (``repro.checkpoint``) — old checkpoints keep restoring.
 
@@ -384,7 +458,7 @@ def restore_auto(ckpt_dir: str, template, *, shardings=None, policy=None,
     if mf.is_sharded_dir(ckpt_dir):
         return restore_sharded(ckpt_dir, template, shardings=shardings,
                                policy=policy, layout=layout,
-                               verify=verify)
+                               verify=verify, retry=retry)
     from repro import checkpoint as legacy
     return legacy.restore(ckpt_dir, template, shardings=shardings,
                           verify=verify)

@@ -317,6 +317,30 @@ class ReconfigCostModel:
                                            n_ranks_old=n_ranks_old,
                                            n_ranks_new=n_ranks_new))
 
+    def failure_restart_s(self, state_bytes: float, *,
+                          drain_restart_s: float,
+                          n_ranks_new: int = 1) -> float:
+        """What restarting one job from its last committed checkpoint
+        costs after an *unplanned* failure.
+
+        No save happens (the failed host took the in-memory state with
+        it); the charge is the restore side only.  Under ``drain`` the
+        incumbent stack reloads a gathered checkpoint and re-admits the
+        job through the full churn path (``drain_restart_s`` — the
+        simulator passes its CKPT_LOAD + churn constant); under
+        ``handoff`` the survivors reshard-restore their 1/F shares and
+        re-jit, capped at the drain restart for the same reason planned
+        handoffs are capped (a slower recovery path would simply not be
+        used).  Lost work since the last commit is charged separately
+        by the simulator — it is a property of the checkpoint cadence,
+        not of the recovery mechanism.
+        """
+        if self.mode == "drain":
+            return drain_restart_s
+        restore = (state_bytes / max(n_ranks_new, 1) / self.restore_bps)
+        return min(drain_restart_s,
+                   restore + self.recompile_s + self.coord_s)
+
     def geometry_s(self, *, base_s: float, drain_s: float) -> float:
         """How long the GPU geometry change blocks the *waiting* job.
 

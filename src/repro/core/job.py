@@ -22,6 +22,14 @@ class Job:
     finish_time: Optional[float] = None
     suspended_overhead: float = 0.0
     ckpt_bytes: float = 0.0
+    # failure-recovery bookkeeping (simulator MTBF events): fraction of
+    # the job's work still to run (shrinks only by checkpoint-saved
+    # progress — work since the last save is lost and redone), the
+    # restart charge to pay when next placed, and how often this job was
+    # killed by a host failure
+    remaining_frac: float = 1.0
+    pending_recovery_s: float = 0.0
+    n_failures: int = 0
 
     @property
     def train(self) -> bool:

@@ -21,11 +21,43 @@ import numpy as np
 
 from repro.core import jct_model
 from repro.core.job import Job, Placement
-from repro.core.leaves import Cluster
-from repro.core.modes import (DynamicMIG, OperationMode, PlaceResult,
-                              ReconfigPlan, make_mode)
+from repro.core.leaves import Cluster, TpuLeaf
+from repro.core.modes import (CKPT_LOAD_S, POD_CHURN_S, DynamicMIG,
+                              OperationMode, PlaceResult, ReconfigPlan,
+                              make_mode)
 from repro.core.profiles import N_COMPUTE_SLICES, PROFILES
 from repro.core.scheduler import Scheduler, WaitQueue
+
+
+@dataclasses.dataclass(frozen=True)
+class FailureModel:
+    """Seeded MTBF-style host failures for the simulator.
+
+    Failure arrivals are exponential with mean ``mtbf_s`` (a dedicated
+    rng stream, so enabling failures never perturbs the ground-truth
+    interference draws).  Each arrival strikes one uniformly-chosen host
+    currently running placements; every job with an instance there is
+    killed: its work since the last periodic checkpoint
+    (``ckpt_interval_s`` cadence) is lost and redone, it pays a
+    restart-from-checkpoint charge priced by the active
+    :class:`~repro.core.jct_model.ReconfigCostModel`
+    (``failure_restart_s`` — restore + recompile under handoffs, the
+    incumbent reload constant under drains), and it is requeued.
+    ``max_failures`` bounds the arrival count so a pathological
+    mtbf << JCT configuration thrashes finitely instead of never
+    terminating.
+    """
+    mtbf_s: float
+    ckpt_interval_s: float = 600.0
+    max_failures: int = 1000
+
+    def __post_init__(self):
+        if self.mtbf_s <= 0:
+            raise ValueError("mtbf_s must be positive")
+        if self.ckpt_interval_s <= 0:
+            raise ValueError("ckpt_interval_s must be positive")
+        if self.max_failures < 1:
+            raise ValueError("max_failures must be >= 1")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,6 +90,12 @@ class SimResult:
     handoff_cost_s: float = 0.0   # suspension charged under handoffs
     reconfig_events: List[ReconfigRecord] = dataclasses.field(
         default_factory=list)
+    # failure-recovery accounting (zero without a FailureModel)
+    n_failures: int = 0           # failure events that killed >= 1 job
+    n_recoveries: int = 0         # restarts-from-checkpoint consumed
+    failure_lost_work_s: float = 0.0   # work redone (since-last-save)
+    failure_restart_cost_s: float = 0.0
+    goodput: float = 1.0          # useful / total busy job-seconds
 
 
 @dataclasses.dataclass
@@ -66,6 +104,12 @@ class _Running:
     placement: Placement
     finish_version: int = 0
     finish_at: float = 0.0        # absolute time of the live finish event
+    # segment bookkeeping for failure-recovery math (a "segment" is one
+    # continuous placement of the job; restarts begin a new segment)
+    seg_start: float = 0.0        # when this segment started
+    seg_work: float = 0.0         # JCT-scaled work seconds in the segment
+    seg_overhead: float = 0.0     # drain/recovery charges inside finish_at
+    seg_frac: float = 1.0         # job.remaining_frac at segment start
 
 
 class Simulation:
@@ -75,6 +119,7 @@ class Simulation:
                  calibrate: bool = True, ground_truth: bool = False,
                  reconfig_cost: Optional[jct_model.ReconfigCostModel]
                  = None,
+                 failure_model: Optional[FailureModel] = None,
                  seed: int = 0):
         self.jobs = {j.job_id: j for j in jobs}
         self.mode = mode
@@ -102,6 +147,20 @@ class Simulation:
         self.reconfig_cost = (reconfig_cost if reconfig_cost is not None
                               else jct_model.ReconfigCostModel())
         self.reconfig_pending: Dict[str, ReconfigPlan] = {}
+        # failure plane: its own rng stream (enabling failures must not
+        # perturb the ground-truth interference draws from self.rng)
+        self.failure_model = failure_model
+        self.failure_rng = np.random.default_rng([seed, 0xFA11])
+        self.n_failures = 0
+        self.n_recoveries = 0
+        self.failure_lost_work_s = 0.0
+        self.failure_restart_cost_s = 0.0
+        self._failures_scheduled = 0
+        # per-job finish-event version counters, monotone across
+        # restarts: without them a stale finish event from a killed
+        # segment (same job_id, version 0) would match the restarted
+        # segment's fresh version-0 record and finish it early
+        self._finish_versions: Dict[str, int] = {}
         self.frag_since: Dict[str, float] = {}
         self.ext_frag: Dict[str, float] = {}
         # utilization integral
@@ -113,6 +172,8 @@ class Simulation:
 
         for j in jobs:
             self._push(j.submit_time, "arrive", j)
+        if failure_model is not None:
+            self._schedule_next_failure()
 
     # ------------------------------------------------------------ events
     def _push(self, t: float, kind: str, payload) -> None:
@@ -138,6 +199,8 @@ class Simulation:
                 self._finish(rec)
             elif kind == "reconfig_done":
                 self._reconfig_done(payload)
+            elif kind == "failure":
+                self._host_failure()
             self._schedule_pass()
         return self._result()
 
@@ -217,15 +280,29 @@ class Simulation:
                                     calibrate=self.calibrate)
 
     def _start(self, job: Job, placement: Placement) -> None:
-        job.start_time = self.now
+        if job.start_time is None:    # set-once: restarts keep the
+            job.start_time = self.now  # original wait-time accounting
         if self._first_start is None:
             self._first_start = self.now
-        dur = self._jct(job, placement)
-        rec = _Running(job, placement, finish_at=self.now + dur)
+        # a restarted job reruns only its unsaved remainder; the restart
+        # charge (restore + recompile, priced at failure time) is paid
+        # now, when the job actually reoccupies resources
+        work = self._jct(job, placement) * job.remaining_frac
+        recovery = job.pending_recovery_s
+        if recovery:
+            self.n_recoveries += 1
+            self.failure_restart_cost_s += recovery
+            job.suspended_overhead += recovery
+            job.pending_recovery_s = 0.0
+        version = self._finish_versions.get(job.job_id, 0)
+        rec = _Running(job, placement, finish_version=version,
+                       finish_at=self.now + work + recovery,
+                       seg_start=self.now, seg_work=work,
+                       seg_overhead=recovery, seg_frac=job.remaining_frac)
         self.running[job.job_id] = rec
         self._busy_slices += sum(PROFILES[i.profile].sm_slices
                                  for i in placement.instances)
-        self._push(rec.finish_at, "finish", (job.job_id, 0))
+        self._push(rec.finish_at, "finish", (job.job_id, version))
 
     def _finish(self, rec: _Running) -> None:
         job = rec.job
@@ -265,7 +342,9 @@ class Simulation:
                 n_ranks_old=n_ranks, n_ranks_new=n_ranks)
             charged_total += charged
             rec.finish_version += 1
+            self._finish_versions[job_id] = rec.finish_version
             rec.job.suspended_overhead += charged
+            rec.seg_overhead += charged
             rec.finish_at = self.now + remaining + charged
             self._push(rec.finish_at, "finish",
                        (job_id, rec.finish_version))
@@ -298,10 +377,100 @@ class Simulation:
         placement = self.mode.apply_reconfig(plan, self.cluster)
         self._start(plan.job, placement)
 
+    # ----------------------------------------------------- host failures
+    def _schedule_next_failure(self) -> None:
+        fm = self.failure_model
+        if fm is None or self._failures_scheduled >= fm.max_failures:
+            return
+        self._failures_scheduled += 1
+        dt = float(self.failure_rng.exponential(fm.mtbf_s))
+        self._push(self.now + dt, "failure", None)
+
+    def _host_failure(self) -> None:
+        """One MTBF arrival: kill every placement on a random busy host.
+
+        Each killed job loses its work since the last periodic
+        checkpoint (``ckpt_interval_s`` cadence within the segment),
+        carries a restart charge priced by the reconfig cost model's
+        ``failure_restart_s`` (drain: the incumbent reload constant;
+        handoff: the survivors' reshard-restore + recompile, capped at
+        the drain figure), and goes back to the queue.  The host's
+        resources return to the pool immediately — the model charges
+        the *jobs* for the failure, not the hardware's repair time.
+        """
+        fm = self.failure_model
+        if fm is None:
+            return
+        if any(j.finish_time is None for j in self.jobs.values()):
+            self._schedule_next_failure()
+        hosts = sorted({i.host_id for rec in self.running.values()
+                        for i in rec.placement.instances})
+        if not hosts:
+            return                   # nothing running: harmless strike
+        victim_host = hosts[int(self.failure_rng.integers(len(hosts)))]
+        victims = [rec for rec in self.running.values()
+                   if any(i.host_id == victim_host
+                          for i in rec.placement.instances)]
+        if not victims:
+            return
+        self.n_failures += 1
+        cm = self.reconfig_cost
+        drain_restart = CKPT_LOAD_S + POD_CHURN_S
+        for rec in victims:
+            job = rec.job
+            # work completed this segment, net of suspension charges
+            # that extended finish_at without advancing the job
+            elapsed = self.now - rec.seg_start
+            done = min(max(elapsed - rec.seg_overhead, 0.0),
+                       rec.seg_work)
+            saved = (done // fm.ckpt_interval_s) * fm.ckpt_interval_s
+            lost = done - saved
+            self.failure_lost_work_s += lost
+            if rec.seg_work > 0:
+                job.remaining_frac = rec.seg_frac * (
+                    1.0 - saved / rec.seg_work)
+            job.n_failures += 1
+            # how many ranks reshard-restore concurrently: repack the
+            # job's leaves around the dead host (the runtime's
+            # elastic.repack_on_failure policy); no viable repack means
+            # a full same-width restart once resources free up
+            from repro.elastic import repack_on_failure
+            leaves, chip = [], {}
+            for i in rec.placement.instances:
+                k = chip.get((i.host_id, i.gpu_id), 0)
+                chip[(i.host_id, i.gpu_id)] = k + 1
+                leaves.append(TpuLeaf(pod=i.host_id, host=i.gpu_id,
+                                      chip=k))
+            failed = sorted({(i.host_id, i.gpu_id)
+                             for i in rec.placement.instances
+                             if i.host_id == victim_host})
+            plan = repack_on_failure(leaves, failed, model_parallel=1)
+            n_ranks_new = (int(np.prod(plan.mesh_shape))
+                           if plan is not None else max(job.size, 1))
+            job.pending_recovery_s = cm.failure_restart_s(
+                jct_model.ckpt_state_bytes(job.model),
+                drain_restart_s=drain_restart,
+                n_ranks_new=max(n_ranks_new, 1))
+            # invalidate the live finish event and release the placement
+            rec.finish_version += 1
+            self._finish_versions[job.job_id] = rec.finish_version
+            self._busy_slices -= sum(PROFILES[i.profile].sm_slices
+                                     for i in rec.placement.instances)
+            self.mode.release(rec.placement, self.cluster)
+            del self.running[job.job_id]
+            self.queue.push(job)
+
     # ------------------------------------------------------------ result
     def _result(self) -> SimResult:
         done = [j for j in self.jobs.values() if j.finish_time is not None]
         jcts = {j.job_id: j.finish_time - j.start_time for j in done}
+        # goodput: of all job-seconds between start and finish, the
+        # fraction that was neither suspension/restart overhead nor
+        # work redone after a failure (1.0 on an overhead-free run)
+        busy = sum(jcts.values())
+        wasted = (sum(j.suspended_overhead for j in done)
+                  + self.failure_lost_work_s)
+        goodput = (max(0.0, busy - wasted) / busy) if busy > 0 else 1.0
         waits = {j.job_id: j.start_time - j.submit_time for j in done}
         t0 = self._first_start or 0.0
         makespan = self._last_finish - min(
@@ -326,6 +495,11 @@ class Simulation:
             drain_cost_s=self.drain_cost_s,
             handoff_cost_s=self.handoff_cost_s,
             reconfig_events=list(self.reconfig_records),
+            n_failures=self.n_failures,
+            n_recoveries=self.n_recoveries,
+            failure_lost_work_s=self.failure_lost_work_s,
+            failure_restart_cost_s=self.failure_restart_cost_s,
+            goodput=goodput,
         )
 
 
@@ -335,7 +509,8 @@ def simulate(jobs: List[Job], mode_name: str, *, n_hosts: int = 1,
              ground_truth: bool = False, seed: int = 0,
              round_robin: bool = True,
              reconfig_mode: Optional[str] = None,
-             reconfig_cost: Optional[jct_model.ReconfigCostModel] = None
+             reconfig_cost: Optional[jct_model.ReconfigCostModel] = None,
+             failure_model: Optional[FailureModel] = None
              ) -> SimResult:
     """Replay ``jobs`` under operation mode ``mode_name``.
 
@@ -349,6 +524,10 @@ def simulate(jobs: List[Job], mode_name: str, *, n_hosts: int = 1,
     error rather than a silently mislabeled replay.  The default (no
     mode, no cost model) is the incumbent drain behavior, bit-identical
     to the pre-cost-model simulator.
+
+    ``failure_model`` arms seeded MTBF host failures (see
+    :class:`FailureModel`); without one the run is bit-identical to the
+    failure-free simulator — the failure plane is strictly opt-in.
     """
     import copy
     jobs = copy.deepcopy(jobs)
@@ -364,5 +543,6 @@ def simulate(jobs: List[Job], mode_name: str, *, n_hosts: int = 1,
                      n_hosts=n_hosts, gpus_per_host=gpus_per_host,
                      scheduler=Scheduler(policy, depth=backfill_depth),
                      calibrate=calibrate, ground_truth=ground_truth,
-                     reconfig_cost=reconfig_cost, seed=seed)
+                     reconfig_cost=reconfig_cost,
+                     failure_model=failure_model, seed=seed)
     return sim.run()

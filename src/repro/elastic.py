@@ -136,3 +136,34 @@ def plan_elastic_remesh(leaves: Sequence[TpuLeaf],
     return RemeshPlan(tuple(used), (data, model_parallel),
                       ("data", "model"), tuple(sorted(failed)),
                       handoff=handoff)
+
+
+def repack_on_failure(leaves: Sequence[TpuLeaf],
+                      failed_hosts: Sequence[Tuple[int, int]],
+                      *, model_parallel: int = 1,
+                      ckpt_base_dir: Optional[str] = None
+                      ) -> Optional[RemeshPlan]:
+    """Remesh a job after an *unplanned* host failure.
+
+    Differs from :func:`plan_elastic_remesh` (the planned-repack path)
+    in how it degrades: a planned handoff with no committed checkpoint
+    is a caller bug and is refused, but a *failure* can strike before
+    the first commit, and the honest answer there is a full restart —
+    so a ``ckpt_base_dir`` with no committed step is dropped rather
+    than raised on (the plan carries ``handoff=None``: restart from
+    scratch), and losing too many hosts to form even one model shard
+    returns ``None`` (no viable repack; the scheduler requeues the
+    job).  The simulator's MTBF failure events recover through this
+    entry point and charge the result via
+    :meth:`repro.core.jct_model.ReconfigCostModel.failure_restart_s`.
+    """
+    if ckpt_base_dir is not None:
+        from repro import ckpt as ckpt_lib
+        if ckpt_lib.latest_step(ckpt_base_dir) is None:
+            ckpt_base_dir = None
+    try:
+        return plan_elastic_remesh(leaves, failed_hosts,
+                                   model_parallel=model_parallel,
+                                   ckpt_base_dir=ckpt_base_dir)
+    except RuntimeError:
+        return None

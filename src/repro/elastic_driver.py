@@ -54,6 +54,9 @@ from repro import optim
 from repro.core.leaves import TpuLeaf
 from repro.data import DataConfig, SyntheticCorpus
 from repro.elastic import plan_elastic_remesh
+from repro.faults.plan import maybe_fire
+from repro.faults.recovery import RecoveryReport, walk_committed
+from repro.faults.retry import NO_RETRY, RetryPolicy
 from repro.sharding import make_rules
 from repro.train import (EFState, init_sharded_zero1, init_slow_residuals,
                          make_bucket_layout, make_jitted_train_step)
@@ -169,6 +172,8 @@ class ElasticRunResult:
     params: Any
     opt_state: Any
     steady_step_s: float
+    start_step: int = 0                   # > 0 on a restart-resume
+    recovery: Optional[RecoveryReport] = None
 
 
 @dataclasses.dataclass
@@ -218,7 +223,8 @@ class ElasticDriver:
                  data_cfg: DataConfig, *, base_dir: str,
                  bucket_bytes: int = 64 << 10, accum: int = 1,
                  mode: str = "handoff", error_feedback: bool = False,
-                 verify: bool = True):
+                 verify: bool = True, retry: RetryPolicy = NO_RETRY,
+                 fallback_on_corrupt: bool = False):
         if mode not in ("handoff", "drain"):
             raise ValueError(f"unknown driver mode {mode!r}")
         self.model = model
@@ -230,6 +236,12 @@ class ElasticDriver:
         self.mode = mode
         self.ef = error_feedback
         self.verify = verify
+        # recovery knobs: transient-I/O retry for every checkpoint
+        # save/restore this driver performs, and whether a corrupt
+        # committed step at resume quarantines + falls back to the
+        # previous one instead of raising
+        self.retry = retry
+        self.fallback_on_corrupt = fallback_on_corrupt
 
     # ----------------------------------------------------------- setup
     def _setup(self, shape: Tuple[int, int], seed: int) -> _MeshCtx:
@@ -263,6 +275,36 @@ class ElasticDriver:
         return [TpuLeaf(pod=p, host=d, chip=0)
                 for p in range(shape[0]) for d in range(shape[1])]
 
+    # ------------------------------------------------------ save/restore
+    def _save(self, ctx: _MeshCtx, step: int) -> None:
+        """Commit ``ctx``'s state as checkpoint ``step`` (the state
+        *before* executing training step ``step``)."""
+        sdir = ckpt_lib.step_dir(self.base_dir, step)
+        maybe_fire("driver.pre_save")
+        if self.mode == "handoff":
+            ckpt_lib.save_sharded(sdir, step, (ctx.params, ctx.state),
+                                  layout=ctx.layout, mesh=ctx.mesh,
+                                  blocking=True, retry=self.retry)
+        else:
+            legacy_ckpt.save(sdir, step, (ctx.params, ctx.state),
+                             blocking=True)
+
+    def _restore_into(self, path: str, step: int, shape: Tuple[int, int],
+                      seed: int) -> _MeshCtx:
+        """Build a fresh mesh context for ``shape`` and restore committed
+        step ``step`` into it (format-dispatched, reshard-capable)."""
+        ctx = self._setup(shape, seed)
+        rstep, (ctx.params, ctx.state) = ckpt_lib.restore_auto(
+            path, (ctx.params, ctx.state),
+            shardings=(None, ctx.opt_shardings),
+            layout=ctx.layout if self.mode == "handoff" else None,
+            retry=self.retry)
+        if rstep != step:
+            raise ckpt_lib.CorruptCheckpointError(
+                f"checkpoint at {path!r} records step {rstep}, directory "
+                f"name says {step}")
+        return ctx
+
     # --------------------------------------------------------- handoff
     def _handoff(self, ctx: _MeshCtx, event: ReconfigEvent, step: int,
                  seed: int) -> Tuple[_MeshCtx, HandoffMeasurement]:
@@ -281,13 +323,7 @@ class ElasticDriver:
                 f"directory for this elastic run")
 
         t0 = time.perf_counter()
-        if self.mode == "handoff":
-            ckpt_lib.save_sharded(sdir, step, (ctx.params, ctx.state),
-                                  layout=ctx.layout, mesh=ctx.mesh,
-                                  blocking=True)
-        else:
-            legacy_ckpt.save(sdir, step, (ctx.params, ctx.state),
-                             blocking=True)
+        self._save(ctx, step)
         save_s = time.perf_counter() - t0
         save_bytes = _dir_bytes(sdir)
 
@@ -318,13 +354,15 @@ class ElasticDriver:
         if self.mode == "handoff":
             rstep, (new.params, new.state) = ckpt_lib.restore_sharded(
                 plan.handoff.step_dir, (new.params, new.state),
-                shardings=(None, new.opt_shardings), layout=new.layout)
+                shardings=(None, new.opt_shardings), layout=new.layout,
+                retry=self.retry)
         else:
             rstep, (new.params, new.state) = legacy_ckpt.restore(
                 plan.handoff.step_dir, (new.params, new.state),
                 shardings=(None, new.opt_shardings))
         restore_s = time.perf_counter() - t0
         assert rstep == step, (rstep, step)
+        maybe_fire("driver.post_restore")
 
         verified = False
         if self.verify:
@@ -344,17 +382,60 @@ class ElasticDriver:
             restore_bytes=save_bytes, state_bytes=state_bytes,
             verified=verified)
 
+    # ----------------------------------------------------------- resume
+    def _resume(self, shape_at, seed: int
+                ) -> Tuple[Optional[_MeshCtx], int,
+                           Optional[RecoveryReport]]:
+        """Restore the newest usable committed step from ``base_dir``.
+
+        Checkpoint step ``k`` holds the state *before* executing step
+        ``k`` (both the handoff saves and the periodic saves follow this
+        convention), so the resumed run continues at step ``k`` on
+        ``shape_at(k)``.  With ``fallback_on_corrupt`` a corrupt newest
+        step is quarantined on disk and the walk falls back through
+        history; otherwise the first failure propagates.  No committed
+        step at all means the crash predated the first commit — start
+        from scratch (the caller's fresh-start path).
+        """
+        steps = ckpt_lib.committed_steps(self.base_dir)
+        if not steps:
+            return None, 0, None
+
+        def attempt(step: int, path: str) -> _MeshCtx:
+            return self._restore_into(path, step, shape_at(step), seed)
+
+        if self.fallback_on_corrupt:
+            ctx, report = walk_committed(self.base_dir, attempt,
+                                         quarantine_on_disk=True)
+            return ctx, report.restored_step, report
+        step = steps[-1]
+        ctx = attempt(step, ckpt_lib.step_dir(self.base_dir, step))
+        report = RecoveryReport(self.base_dir, attempted=[step],
+                                restored_step=step)
+        return ctx, step, report
+
     # -------------------------------------------------------------- run
     def run(self, n_steps: int,
             schedule: Sequence[ReconfigEvent] = (), *,
             initial_shape: Tuple[int, int] = (2, 2),
-            seed: int = 0) -> ElasticRunResult:
+            seed: int = 0, resume: bool = False, save_every: int = 0,
+            final_save: bool = False) -> ElasticRunResult:
         """Train ``n_steps``, executing every scheduled reconfiguration.
 
         An empty ``schedule`` is the uninterrupted reference run — same
         code path, so bitwise comparisons between the two are symmetric.
+
+        ``save_every=k`` commits a periodic checkpoint before every k-th
+        step (skipped where a handoff already saves); ``final_save``
+        commits the end-of-run state as step ``n_steps``.
+        ``resume=True`` is the restart path: restore the newest usable
+        committed step (see :meth:`_resume`), skip the schedule's
+        already-executed events, and continue — with
+        ``deterministic_reduce`` the continuation is bitwise identical
+        to the uninterrupted run, which is what makes SIGKILL-anywhere
+        recovery provable rather than hopeful.
         """
-        events = {}
+        events: Dict[int, ReconfigEvent] = {}
         for e in schedule:
             if e.step in events:
                 raise ValueError(f"duplicate reconfig step {e.step}")
@@ -371,7 +452,31 @@ class ElasticDriver:
                     f"factorization of the run's "
                     f"{initial_shape[0] * initial_shape[1]} ranks")
             events[e.step] = e
-        if events:
+
+        def shape_at(step: int) -> Tuple[int, int]:
+            # factorization in force when executing `step`: the initial
+            # shape folded over every event at or before it (an event at
+            # step k repacks BEFORE executing k)
+            shape = tuple(initial_shape)
+            for s in sorted(events):
+                if s <= step:
+                    shape = tuple(events[s].mesh_shape)
+            return shape
+
+        start_step = 0
+        recovery: Optional[RecoveryReport] = None
+        ctx: Optional[_MeshCtx] = None
+        if resume:
+            ctx, start_step, recovery = self._resume(shape_at, seed)
+            if start_step >= n_steps > 0 and ctx is not None:
+                raise RuntimeError(
+                    f"resume found committed step {start_step} at or "
+                    f"past the end of the run (n_steps={n_steps}) — "
+                    f"nothing left to execute")
+            # events at or before the resumed step already ran (the
+            # resumed checkpoint is their product)
+            events = {s: e for s, e in events.items() if s > start_step}
+        elif events:
             # fail before compiling anything: a previous run's committed
             # checkpoint past the first event would win the handoff's
             # latest_step lookup over the save this run makes
@@ -382,21 +487,31 @@ class ElasticDriver:
                     f"committed step {stale} past the first reconfig "
                     f"event (step {min(events)}); the handoff would "
                     f"restore that stale state — use a fresh directory "
-                    f"for this elastic run")
+                    f"for this elastic run (or pass resume=True to "
+                    f"continue it)")
         corpus = SyntheticCorpus(self.data_cfg)
-        ctx = self._setup(initial_shape, seed)
+        if ctx is None:
+            ctx = self._setup(shape_at(start_step) if resume
+                              else initial_shape, seed)
         losses: List[float] = []
         shapes: List[Tuple[int, int]] = []
         measurements: List[HandoffMeasurement] = []
         step_times: List[float] = []      # non-first steps per segment
         first_step = True
-        for step in range(n_steps):
+        for step in range(start_step, n_steps):
             if step in events:
                 ctx, m = self._handoff(ctx, events[step], step, seed)
                 measurements.append(m)
                 first_step = True
+            elif (save_every and step > start_step
+                    and step % save_every == 0):
+                # periodic commit of the pre-step state; a handoff at
+                # this step already saved it
+                self._save(ctx, step)
             batch = {k: jnp.asarray(v)
                      for k, v in corpus.batch(step).items()}
+            if first_step:
+                maybe_fire("driver.first_step")
             t0 = time.perf_counter()
             with ctx.mesh:
                 ctx.params, ctx.state, metrics = ctx.step_fn(
@@ -410,6 +525,8 @@ class ElasticDriver:
                 step_times.append(dt)
             losses.append(float(metrics["loss"]))
             shapes.append(ctx.shape)
+        if final_save:
+            self._save(ctx, n_steps)
         # recompile cost = first post-handoff step minus the steady step
         # time (the jit cache is cold on every new factorization)
         steady = statistics.median(step_times) if step_times else 0.0
@@ -418,4 +535,5 @@ class ElasticDriver:
         return ElasticRunResult(losses=losses, measurements=measurements,
                                 mesh_shapes=shapes, params=ctx.params,
                                 opt_state=ctx.state,
-                                steady_step_s=steady)
+                                steady_step_s=steady,
+                                start_step=start_step, recovery=recovery)

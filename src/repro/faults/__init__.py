@@ -1,0 +1,21 @@
+"""Fault-injection plane + crash-safe recovery for the checkpoint path.
+
+Layering (import-cycle contract): this package init re-exports only the
+*injection* and *retry* halves (:mod:`repro.faults.plan`,
+:mod:`repro.faults.retry` — stdlib/numpy only), because
+``repro.checkpoint`` and ``repro.ckpt.sharded`` import them to host
+their injection points.  The *recovery* half
+(:mod:`repro.faults.recovery`) imports the checkpoint modules in turn,
+and the kill harness (:mod:`repro.faults.harness`) sits above both —
+consumers import those submodules explicitly.
+"""
+from repro.faults.plan import (ENV_VAR, KINDS, FaultPlan, FaultSpec,
+                               FiredFault, active_plan, install,
+                               install_from_env, maybe_fire)
+from repro.faults.retry import (NO_RETRY, TRANSIENT_ERRNOS, RetryPolicy)
+
+__all__ = [
+    "ENV_VAR", "KINDS", "FaultPlan", "FaultSpec", "FiredFault",
+    "active_plan", "install", "install_from_env", "maybe_fire",
+    "NO_RETRY", "TRANSIENT_ERRNOS", "RetryPolicy",
+]

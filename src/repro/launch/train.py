@@ -75,6 +75,7 @@ def _run_elastic(args, cfg, model) -> None:
             raise SystemExit(
                 f"reconfig step {e.step} is past the run "
                 f"(--steps {args.steps}); it would silently never fire")
+    from repro.faults.retry import RetryPolicy
     drv = ElasticDriver(
         model,
         optim.AdamWConfig(peak_lr=args.lr, warmup_steps=20,
@@ -83,10 +84,20 @@ def _run_elastic(args, cfg, model) -> None:
                    global_batch=args.batch),
         base_dir=args.ckpt_dir, bucket_bytes=args.bucket_mb << 20,
         accum=args.accum, mode=args.reconfig_mode,
-        error_feedback=args.error_feedback)
+        error_feedback=args.error_feedback,
+        retry=RetryPolicy(max_retries=args.max_restore_retries),
+        fallback_on_corrupt=args.fallback_on_corrupt)
     out = drv.run(args.steps, schedule,
-                  initial_shape=(args.pod_parallel, args.data_parallel))
-    for i, (loss, shape) in enumerate(zip(out.losses, out.mesh_shapes)):
+                  initial_shape=(args.pod_parallel, args.data_parallel),
+                  resume=args.resume)
+    if out.start_step:
+        print(f"resumed from committed step {out.start_step}")
+    if out.recovery is not None and out.recovery.quarantined:
+        for q in out.recovery.quarantined:
+            print(f"quarantined corrupt step {q.step} -> "
+                  f"{q.quarantined_to}")
+    for i, (loss, shape) in enumerate(zip(out.losses, out.mesh_shapes),
+                                      start=out.start_step):
         print(f"step {i:4d}  loss {loss:.4f}  mesh {shape}")
     for m in out.measurements:
         print(f"reconfig@{m.step}: {m.from_shape}->{m.to_shape} "
@@ -137,6 +148,15 @@ def main():
                     action=argparse.BooleanOptionalAction,
                     help="resume from the latest committed checkpoint in "
                          "--ckpt-dir (--no-resume starts from scratch)")
+    ap.add_argument("--max-restore-retries", type=int, default=0,
+                    help="bounded exponential-backoff retries for "
+                         "transient I/O (EIO/ENOSPC/...) during "
+                         "checkpoint save and restore")
+    ap.add_argument("--fallback-on-corrupt", action="store_true",
+                    help="if the newest committed checkpoint fails its "
+                         "CRC/manifest validation at resume, quarantine "
+                         "it on disk and fall back to the previous "
+                         "committed step instead of dying")
     ap.add_argument("--save-sharded", default=True,
                     action=argparse.BooleanOptionalAction,
                     help="write per-rank shard + manifest checkpoints "
@@ -159,6 +179,20 @@ def main():
                     help="pod axis of the initial (pod, data) "
                          "factorization for --reconfig-at runs")
     args = ap.parse_args()
+
+    # the recovery knobs act at restore time; with --no-resume there is
+    # no restore, so accepting them would silently do nothing
+    if not args.resume and args.fallback_on_corrupt:
+        raise SystemExit("--fallback-on-corrupt is a resume-time "
+                         "recovery knob; it does nothing with "
+                         "--no-resume — drop one of the two")
+    if not args.resume and args.max_restore_retries and not args.reconfig_at:
+        raise SystemExit("--max-restore-retries needs a restore to "
+                         "retry; with --no-resume (and no --reconfig-at "
+                         "handoffs) it does nothing — drop one of the "
+                         "two")
+    if args.max_restore_retries < 0:
+        raise SystemExit("--max-restore-retries must be >= 0")
 
     cfg = get_config(args.arch)
     if not args.full_config:

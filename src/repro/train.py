@@ -687,6 +687,13 @@ class TrainerConfig:
     # sharded (per-rank shard + manifest) checkpoint format; False falls
     # back to the legacy gathered per-leaf format (repro.checkpoint)
     save_sharded: bool = True
+    # recovery knobs (repro.faults): bounded exponential-backoff retries
+    # for transient I/O during checkpoint save/restore, and whether a
+    # corrupt committed step at resume is quarantined on disk with
+    # fallback to the previous committed step (RecoveryReport returned
+    # in the run output) instead of raising
+    max_restore_retries: int = 0
+    fallback_on_corrupt: bool = False
 
 
 class Trainer:
@@ -766,8 +773,12 @@ class Trainer:
         return (exact(params), pol)
 
     def _run(self, *, seed: int, resume: bool) -> Dict[str, Any]:
+        from repro.faults.recovery import restore_with_fallback
+        from repro.faults.retry import RetryPolicy
         tcfg = self.tcfg
         start = 0
+        recovery = None
+        retry = RetryPolicy(max_retries=tcfg.max_restore_retries)
         params, opt_state = self._init_state(seed)
         mesh = self.rules.mesh if self.rules is not None else None
         if resume:
@@ -778,11 +789,18 @@ class Trainer:
                 # f32 masters on every device until the first step
                 shardings = ((None, self._opt_shardings)
                              if self._opt_shardings is not None else None)
-                start, (params, opt_state) = ckpt_lib.restore_auto(
-                    ckpt_lib.step_dir(tcfg.ckpt_dir, last),
-                    (params, opt_state), shardings=shardings,
-                    policy=self._restore_policy(params, opt_state),
-                    layout=self._layout)
+                policy = self._restore_policy(params, opt_state)
+                if tcfg.fallback_on_corrupt:
+                    start, (params, opt_state), recovery = \
+                        restore_with_fallback(
+                            tcfg.ckpt_dir, (params, opt_state),
+                            shardings=shardings, policy=policy,
+                            layout=self._layout, retry=retry)
+                else:
+                    start, (params, opt_state) = ckpt_lib.restore_auto(
+                        ckpt_lib.step_dir(tcfg.ckpt_dir, last),
+                        (params, opt_state), shardings=shardings,
+                        policy=policy, layout=self._layout, retry=retry)
         corpus = SyntheticCorpus(self.data_cfg)
         prefetch = Prefetcher(corpus, start_step=start)
         pending = None
@@ -822,4 +840,5 @@ class Trainer:
             prefetch.close()
         return {"params": params, "opt_state": opt_state,
                 "history": self.history,
-                "stragglers": self.straggler.summary()}
+                "stragglers": self.straggler.summary(),
+                "recovery": recovery}

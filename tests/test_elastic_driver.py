@@ -84,7 +84,8 @@ def test_run_refuses_stale_newer_checkpoint(tmp_path):
     compiling anything (so ``model`` is never touched here)."""
     stale = tmp_path / "step_00000099"
     stale.mkdir()
-    (stale / "manifest.json").write_text("{}")
+    # committed_steps verifies the manifest's step matches the dir name
+    (stale / "manifest.json").write_text('{"step": 99}')
     drv = ElasticDriver(object(), optim.AdamWConfig(),
                         DataConfig(vocab_size=16, seq_len=4,
                                    global_batch=2),

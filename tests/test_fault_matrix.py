@@ -1,0 +1,128 @@
+"""Driver kill matrix: SIGKILL a real 3-handoff ElasticDriver run at
+sampled injection points, relaunch with ``resume=True``, and require the
+continued run to be bitwise-identical to an uninterrupted reference —
+losses AND the final committed checkpoint bytes.
+
+Sampled windows (the PR-7 acceptance): mid-save (``sharded.write``),
+inside the commit marker window (``sharded.manifest`` — manifest
+written, renames pending), mid-restore (``sharded.read``), and the
+recompile window of a fresh mesh segment (``driver.first_step``).
+``sharded.between_renames`` has no driver-path arrival (the driver never
+re-saves a committed step) and is covered by the save crash matrix in
+test_faults.py.
+"""
+import hashlib
+import os
+import re
+
+import pytest
+
+from repro import ckpt as ckpt_lib
+from repro.faults import FaultPlan, FaultSpec
+from repro.faults import harness
+
+N_STEPS = 8
+# (2,2) -> (4,1) -> (1,4) -> (2,2): three handoffs on 8 forced devices
+SCHEDULE = "[ReconfigEvent(step=2, mesh_shape=(4, 1)), " \
+           "ReconfigEvent(step=4, mesh_shape=(1, 4)), " \
+           "ReconfigEvent(step=6, mesh_shape=(2, 2))]"
+
+CHILD = """
+import numpy as np
+from repro import optim
+from repro.data import DataConfig
+from repro.elastic_driver import ElasticDriver, ReconfigEvent
+from repro.models.registry import get_config, build_model, reduced_config
+
+cfg = reduced_config(get_config('llama3.2-1b'))
+model = build_model(cfg, remat=False)
+ocfg = optim.AdamWConfig(peak_lr=1e-3, warmup_steps=2, total_steps=%(n)d)
+dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=8)
+drv = ElasticDriver(model, ocfg, dcfg, base_dir=%(base)r,
+                    bucket_bytes=64 << 10)
+out = drv.run(%(n)d, %(schedule)s, initial_shape=(2, 2),
+              resume=%(resume)s, final_save=True)
+print('START', out.start_step)
+for i, loss in enumerate(out.losses, start=out.start_step):
+    print('LOSS %%d %%r' %% (i, loss))
+print('DRIVER_DONE')
+"""
+
+
+def _child_code(base, resume):
+    return CHILD % dict(n=N_STEPS, base=base, schedule=SCHEDULE,
+                        resume=resume)
+
+
+def _losses(stdout):
+    return dict(re.findall(r"LOSS (\d+) (\S+)", stdout))
+
+
+def _hash_dir(path):
+    out = {}
+    for name in sorted(os.listdir(path)):
+        with open(os.path.join(path, name), "rb") as f:
+            out[name] = hashlib.sha256(f.read()).hexdigest()
+    return out
+
+
+@pytest.fixture(scope="module")
+def reference(tmp_path_factory):
+    """One uninterrupted 3-handoff run: losses + final checkpoint."""
+    base = str(tmp_path_factory.mktemp("ref"))
+    res = harness.run_child(_child_code(base, resume=False), n_devices=8)
+    out = harness.expect_clean(res)
+    assert "DRIVER_DONE" in out
+    losses = _losses(out)
+    assert sorted(map(int, losses)) == list(range(N_STEPS))
+    final = ckpt_lib.step_dir(base, N_STEPS)
+    assert ckpt_lib.latest_step(base) == N_STEPS
+    return {"losses": losses, "final_hash": _hash_dir(final)}
+
+
+# (point, hit, committed step the relaunch must resume from)
+KILL_POINTS = [
+    ("sharded.write", 3, 0),     # mid-save of handoff 1: no commit yet
+    ("sharded.manifest", 2, 2),  # handoff 2's commit window: tmp only
+    ("sharded.read", 2, 2),      # mid-restore of handoff 1
+    ("driver.first_step", 3, 4), # recompile window of mesh segment 3
+]
+
+
+@pytest.mark.parametrize("point,hit,resume_from", KILL_POINTS,
+                         ids=[p for p, _, _ in KILL_POINTS])
+def test_kill_and_resume_bitwise(tmp_path, reference, point, hit,
+                                 resume_from):
+    base = str(tmp_path)
+    plan = FaultPlan([FaultSpec(point, "crash", hit=hit)])
+    killed = harness.run_child(_child_code(base, resume=False),
+                               plan=plan, n_devices=8)
+    harness.expect_sigkill(killed)
+
+    # never a torn dir: whatever latest_step names must be committed
+    last = ckpt_lib.latest_step(base)
+    assert last == (resume_from or None), \
+        f"kill at {point} left latest_step={last}"
+
+    resumed = harness.run_child(_child_code(base, resume=True),
+                                n_devices=8)
+    out = harness.expect_clean(resumed)
+    assert "DRIVER_DONE" in out
+    assert re.search(rf"^START {resume_from}$", out, re.M), out
+
+    got = _losses(out)
+    assert sorted(map(int, got)) == list(range(resume_from, N_STEPS))
+    ref = reference["losses"]
+    for step, loss in got.items():
+        assert loss == ref[step], \
+            (point, step, loss, ref[step])       # bitwise (repr) equal
+
+    # the resumed run's final commit is byte-identical to the reference
+    assert ckpt_lib.latest_step(base) == N_STEPS
+    assert _hash_dir(ckpt_lib.step_dir(base, N_STEPS)) == \
+        reference["final_hash"]
+
+    # the dead child's in-flight tmp debris was swept by a later commit
+    debris = [d for d in os.listdir(base)
+              if ".tmp-" in d or ".old-" in d]
+    assert debris == [], debris

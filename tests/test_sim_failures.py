@@ -1,0 +1,144 @@
+"""Seeded MTBF host failures in the simulator + failure-time repack.
+
+The failure plane is strictly opt-in: without a ``FailureModel`` the
+simulator must stay bit-identical to the failure-free runs the golden
+tests pin.  With one armed, jobs still all finish, lost work and
+restart charges are accounted, and goodput drops below 1.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro import ckpt as ckpt_lib
+from repro.core.jct_model import ReconfigCostModel
+from repro.core.leaves import TpuLeaf
+from repro.core.simulator import FailureModel, simulate
+from repro.core.traces import TraceCategory, generate_trace
+from repro.elastic import repack_on_failure
+
+
+def _trace(seed=0, size_dist="balanced", mix="train", max_size=4):
+    return generate_trace(TraceCategory("philly", size_dist, mix),
+                          seed=seed, double=False, max_size=max_size)
+
+
+FM = FailureModel(mtbf_s=3 * 3600.0, ckpt_interval_s=600.0)
+
+
+def test_failure_model_validation():
+    with pytest.raises(ValueError, match="mtbf"):
+        FailureModel(mtbf_s=0.0)
+    with pytest.raises(ValueError, match="ckpt_interval"):
+        FailureModel(mtbf_s=1.0, ckpt_interval_s=-1.0)
+    with pytest.raises(ValueError, match="max_failures"):
+        FailureModel(mtbf_s=1.0, max_failures=0)
+
+
+def test_opt_in_default_is_bit_identical():
+    jobs = _trace()
+    base = simulate(jobs, "DM")
+    again = simulate(_trace(), "DM", failure_model=None)
+    assert dataclasses.asdict(base) == dataclasses.asdict(again)
+    assert base.n_failures == 0 and base.failure_lost_work_s == 0.0
+    # reconfig suspension already counts against goodput; failures are
+    # simply absent from it here
+    assert 0.0 < base.goodput <= 1.0
+
+
+def test_failures_occur_and_all_jobs_still_finish():
+    jobs = _trace()
+    r = simulate(jobs, "DM", failure_model=FM)
+    assert r.n_failures > 0, "MTBF of 3h must strike this trace"
+    assert r.n_jobs == len(jobs)                # conservation holds
+    assert r.n_recoveries > 0
+    assert r.failure_lost_work_s >= 0.0
+    assert r.failure_restart_cost_s > 0.0
+
+
+def test_goodput_degrades_under_failures():
+    jobs = _trace()
+    clean = simulate(jobs, "DM")
+    faulty = simulate(_trace(), "DM", failure_model=FM)
+    assert 0.0 <= faulty.goodput < clean.goodput
+    assert faulty.goodput < 1.0
+
+
+def test_seeded_failures_are_deterministic():
+    a = simulate(_trace(), "DM", failure_model=FM, seed=0)
+    b = simulate(_trace(), "DM", failure_model=FM, seed=0)
+    assert dataclasses.asdict(a) == dataclasses.asdict(b)
+    c = simulate(_trace(), "DM", failure_model=FM, seed=1)
+    assert dataclasses.asdict(c) != dataclasses.asdict(a)
+
+
+def test_handoff_restart_charge_never_exceeds_drain():
+    """failure_restart_s: the handoff recovery is min-capped at the
+    drain constant, so per-run restart cost under a handoff cost model
+    can't exceed the drain model's for the same failure sequence."""
+    jobs = _trace()
+    drain = simulate(jobs, "DM", failure_model=FM,
+                     reconfig_cost=ReconfigCostModel(mode="drain"))
+    hand = simulate(_trace(), "DM", failure_model=FM,
+                    reconfig_cost=ReconfigCostModel(mode="handoff"))
+    assert drain.n_failures == hand.n_failures  # same seeded sequence
+    assert hand.failure_restart_cost_s <= drain.failure_restart_cost_s \
+        + 1e-9
+
+
+def test_max_failures_bounds_the_plane():
+    one = FailureModel(mtbf_s=600.0, max_failures=1)
+    r = simulate(_trace(), "DM", failure_model=one)
+    assert r.n_failures <= 1
+    assert r.n_jobs == len(_trace())
+
+
+def test_cost_model_failure_restart_semantics():
+    cm_d = ReconfigCostModel(mode="drain")
+    cm_h = ReconfigCostModel(mode="handoff")
+    state = 4 << 30
+    assert cm_d.failure_restart_s(state, drain_restart_s=7.0) == 7.0
+    h = cm_h.failure_restart_s(state, drain_restart_s=7.0, n_ranks_new=8)
+    assert 0.0 < h <= 7.0
+    # more survivors -> each restores a smaller share, never slower
+    h1 = cm_h.failure_restart_s(state, drain_restart_s=1e9, n_ranks_new=1)
+    h8 = cm_h.failure_restart_s(state, drain_restart_s=1e9, n_ranks_new=8)
+    assert h8 <= h1
+
+
+# ---------------------------------------------------- repack_on_failure
+
+def _leaves(n_hosts, chips=2):
+    return [TpuLeaf(pod=0, host=h, chip=c)
+            for h in range(n_hosts) for c in range(chips)]
+
+
+def test_repack_on_failure_shrinks_to_survivors():
+    plan = repack_on_failure(_leaves(4), [(0, 1)], model_parallel=1)
+    assert plan is not None
+    assert (0, 1) not in {(l.pod, l.host) for l in plan.surviving}
+    assert int(np.prod(plan.mesh_shape)) == len(plan.surviving)
+    assert plan.handoff is None                 # no ckpt dir given
+
+
+def test_repack_on_failure_none_when_too_few_survive():
+    # every host dead: not even one model shard can form
+    assert repack_on_failure(_leaves(2),
+                             [(0, 0), (0, 1)], model_parallel=1) is None
+
+
+def test_repack_on_failure_drops_uncommitted_ckpt_dir(tmp_path):
+    """A failure before the first commit restarts from scratch instead
+    of refusing (contrast: planned plan_elastic_remesh raises here)."""
+    plan = repack_on_failure(_leaves(4), [(0, 1)], model_parallel=1,
+                             ckpt_base_dir=str(tmp_path))
+    assert plan is not None and plan.handoff is None
+
+
+def test_repack_on_failure_carries_committed_handoff(tmp_path):
+    tree = {"w": np.arange(8, dtype=np.float32)}
+    ckpt_lib.save_sharded(ckpt_lib.step_dir(str(tmp_path), 30), 30, tree)
+    plan = repack_on_failure(_leaves(4), [(0, 1)], model_parallel=1,
+                             ckpt_base_dir=str(tmp_path))
+    assert plan is not None and plan.handoff is not None
+    assert plan.handoff.step == 30
