@@ -8,12 +8,12 @@ from __future__ import annotations
 
 import traceback
 
-from benchmarks import (ckpt_bench, drain_costs, elastic_bench,
-                        fault_bench, fig6_parity, fig7_train_fifo,
-                        fig8_mixed_backfill, fig9_placement,
-                        fig10_transport, fig11_allreduce_bw,
-                        grad_sync_bench, kernel_bench, roofline,
-                        table1_workloads)
+from benchmarks import (ckpt_bench, cluster_bench, drain_costs,
+                        elastic_bench, fault_bench, fig6_parity,
+                        fig7_train_fifo, fig8_mixed_backfill,
+                        fig9_placement, fig10_transport,
+                        fig11_allreduce_bw, grad_sync_bench,
+                        kernel_bench, roofline, table1_workloads)
 
 MODULES = [
     ("table1_workloads", table1_workloads),
@@ -27,6 +27,7 @@ MODULES = [
     ("grad_sync_bench", grad_sync_bench),
     ("ckpt_bench", ckpt_bench),
     ("elastic_bench", elastic_bench),
+    ("cluster_bench", cluster_bench),
     ("fault_bench", fault_bench),
     ("kernel_bench", kernel_bench),
     ("roofline", roofline),

@@ -31,6 +31,8 @@ REQUIRED_KEYS = {
     "BENCH_elastic.json": ("measurements", "cost_model", "replay",
                            "acceptance"),
     "BENCH_fault.json": ("recovery", "replay", "acceptance"),
+    "BENCH_cluster.json": ("pool", "measurements", "cost_model",
+                           "replay", "repacks", "acceptance"),
 }
 
 

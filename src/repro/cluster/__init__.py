@@ -1,0 +1,30 @@
+"""Multi-tenant elastic cluster runtime — co-scheduled jobs on one
+shared device pool.
+
+Layers (bottom up):
+
+- :mod:`repro.cluster.pool` — the :class:`DevicePool` ledger: disjoint
+  per-job device subsets, geometry-valid placements, fragmentation and
+  defrag planning;
+- :mod:`repro.cluster.worker` — the per-segment subprocess entry point
+  (one :class:`~repro.elastic_driver.ElasticDriver` segment per child);
+- :mod:`repro.cluster.manager` — :class:`JobManager`, one job's segment
+  subprocess lifecycle (launch/poll/crash bookkeeping);
+- :mod:`repro.cluster.runtime` — :class:`ClusterRuntime`, the
+  scheduler-driven co-scheduling loop (quotas, priority tiers, defrag
+  and rebalance repacks, crash-restart, handoff-cost measurement).
+"""
+from repro.cluster.manager import (ClusterJobSpec, JobManager,
+                                   SegmentResult)
+from repro.cluster.pool import (Allocation, DefragMove, DevicePool,
+                                PoolError)
+from repro.cluster.runtime import (ClusterError, ClusterJobOutcome,
+                                   ClusterRunResult, ClusterRuntime,
+                                   RepackEvent)
+
+__all__ = [
+    "Allocation", "DefragMove", "DevicePool", "PoolError",
+    "ClusterJobSpec", "JobManager", "SegmentResult",
+    "ClusterError", "ClusterJobOutcome", "ClusterRunResult",
+    "ClusterRuntime", "RepackEvent",
+]

@@ -1,0 +1,97 @@
+"""Cluster worker: one job *segment* in a subprocess.
+
+The :class:`~repro.cluster.manager.JobManager` launches this module
+(``python -m repro.cluster.worker --spec S --result R``) with
+``XLA_FLAGS`` forcing exactly the job's device count, so each
+co-scheduled job gets its own private fake-device world sized to its
+pool allocation.  The worker arms any namespaced fault plan *first*
+(:func:`repro.faults.plan.install_from_env` — before anything compiles,
+so crash specs can fire anywhere in the segment), runs one
+:class:`~repro.elastic_driver.ElasticDriver` segment, and writes the
+result JSON atomically (tmp + rename) — a missing/partial result file
+is how the parent distinguishes a crash from a finished segment.
+
+Segment protocol (the cluster runtime's handoff-by-segments):
+
+- first segment: fresh start on the assigned shape, train to ``run_to``,
+  ``final_save`` commits step ``run_to``;
+- later segments: ``resume=True`` restores the newest committed step
+  onto the (possibly different) assigned shape — the reshard-restore is
+  the receiving half of the repack — and continues to the new ``run_to``.
+
+``total_steps`` is always the job's FULL step count: the AdamW schedule
+is absolute-step-indexed and :class:`~repro.data.SyntheticCorpus`
+batches are deterministic by absolute step, which is what makes the
+stitched per-job loss curve bitwise-equal to an uninterrupted run.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+
+def run_segment(spec: dict) -> dict:
+    # arm the (namespaced) fault plan before jax wakes up so injected
+    # crashes can hit compile/first-step/save paths too
+    from repro.faults.plan import install_from_env
+    install_from_env(spec.get("job_id"))
+
+    from repro import optim
+    from repro.data import DataConfig
+    from repro.elastic_driver import ElasticDriver
+    from repro.models.registry import (build_model, get_config,
+                                       reduced_config)
+
+    cfg = reduced_config(get_config(spec["arch"]))
+    model = build_model(cfg, remat=False)
+    ocfg = optim.AdamWConfig(peak_lr=spec.get("peak_lr", 1e-3),
+                             warmup_steps=spec.get("warmup_steps", 2),
+                             total_steps=spec["total_steps"])
+    dcfg = DataConfig(vocab_size=cfg.vocab_size,
+                      seq_len=spec.get("seq_len", 16),
+                      global_batch=spec.get("global_batch", 8))
+    drv = ElasticDriver(model, ocfg, dcfg, base_dir=spec["base_dir"],
+                        bucket_bytes=spec.get("bucket_bytes", 64 << 10),
+                        fallback_on_corrupt=True)
+    shape = tuple(spec["shape"])
+    res = drv.run(spec["run_to"], (), initial_shape=shape,
+                  seed=spec.get("seed", 0),
+                  resume=bool(spec.get("resume", False)),
+                  final_save=bool(spec.get("final_save", True)))
+    return {
+        "job_id": spec["job_id"],
+        "start_step": res.start_step,
+        "end_step": spec["run_to"],
+        "shape": list(shape),
+        "n_ranks": shape[0] * shape[1],
+        "losses": res.losses,
+        "steady_step_s": res.steady_step_s,
+        "first_step_s": res.first_step_s,
+        "state_bytes": res.state_bytes,
+        "final_save_s": res.final_save_s,
+        "final_save_bytes": res.final_save_bytes,
+        "resume_restore_s": res.resume_restore_s,
+        "resume_restore_bytes": res.resume_restore_bytes,
+        "resume_setup_s": res.resume_setup_s,
+        "recovered_step": (res.recovery.restored_step
+                           if res.recovery else None),
+    }
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--spec", required=True)
+    ap.add_argument("--result", required=True)
+    args = ap.parse_args(argv)
+    with open(args.spec) as f:
+        spec = json.load(f)
+    out = run_segment(spec)
+    tmp = args.result + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(out, f)
+    os.replace(tmp, args.result)      # atomic: exists => complete
+
+
+if __name__ == "__main__":
+    main()

@@ -389,6 +389,41 @@ class ReconfigCostModel:
                    recompile_s=recompile, coord_s=coord_s)
 
 
+def summarize_by_size(measurements) -> List[Dict[str, float]]:
+    """Group handoff measurements by job size — ``(state_bytes,
+    n_ranks)`` — and take per-group medians.
+
+    The cluster runtime measures handoffs across *several* co-scheduled
+    jobs of different widths and model sizes; this summary is what a
+    multi-size calibration reports (``BENCH_cluster.json``'s
+    ``by_size``), so the dependence of save/restore/recompile wallclock
+    on state bytes and rank count is visible rather than averaged away.
+    Measurements are mappings shaped like
+    :meth:`repro.elastic_driver.HandoffMeasurement.to_dict` with
+    ``n_ranks`` (``to_shape`` product) either present or derivable.
+    """
+    import numpy as np
+    groups: Dict[Tuple[int, int], List[Dict]] = {}
+    for m in measurements:
+        m = dict(m)
+        n_ranks = int(m.get("n_ranks")
+                      or int(np.prod(m.get("to_shape", (1,)))))
+        key = (int(m.get("state_bytes", 0)), n_ranks)
+        groups.setdefault(key, []).append(m)
+    out: List[Dict[str, float]] = []
+    for (state_bytes, n_ranks), ms in sorted(groups.items()):
+        med = lambda k: float(np.median([m.get(k, 0.0) for m in ms]))
+        out.append({
+            "state_bytes": float(state_bytes), "n_ranks": float(n_ranks),
+            "n": float(len(ms)), "save_s": med("save_s"),
+            "restore_s": med("restore_s"), "setup_s": med("setup_s"),
+            "compile_s": med("compile_s"),
+            "save_bytes": med("save_bytes"),
+            "restore_bytes": med("restore_bytes"),
+        })
+    return out
+
+
 # ---------------------------------------------------------------------------
 # calibration (§5.2)
 # ---------------------------------------------------------------------------

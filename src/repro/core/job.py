@@ -7,6 +7,19 @@ from typing import List, Optional, Tuple
 from repro.core.leaves import Instance
 
 
+# priority tiers (numerically lower = more important).  Tier 0 jobs are
+# latency/SLA-sensitive: the cluster runtime places them for best
+# transport (single-host SHM when they fit) and lets them trigger
+# consolidation repacks of lower-tier jobs; tier 1 is the default
+# best-effort tier; higher numbers yield to everything above them.
+TIER_HIGH = 0
+TIER_NORMAL = 1
+
+# tenant every job belongs to unless a trace says otherwise — keeps the
+# single-tenant replay paths (and their goldens) bit-identical
+DEFAULT_TENANT = "default"
+
+
 @dataclasses.dataclass
 class Job:
     job_id: str
@@ -16,6 +29,13 @@ class Job:
     batch: int
     base_duration: float          # JCT on the reference placement (seconds)
     submit_time: float = 0.0
+
+    # multi-tenancy: which tenant owns the job (per-tenant quotas are
+    # enforced by the scheduler when armed) and its priority tier.
+    # Defaults reproduce the single-tenant, single-tier behavior every
+    # existing trace and golden replay encodes.
+    tenant: str = DEFAULT_TENANT
+    priority_tier: int = TIER_NORMAL
 
     # runtime bookkeeping
     start_time: Optional[float] = None

@@ -6,11 +6,18 @@ Two heuristics:
    so the bigger-memory leaf is wasted there).
 2. *Topology-aware placement* — round-robin leaves across physical GPUs of
    the host (uneven packing saturates a single GPU's PCIe interface, Fig 9).
+
+The cluster-runtime half (:mod:`repro.cluster`) reuses the same two
+ideas at host granularity: :func:`cluster_placement` maps a job's
+priority tier to a device-pool placement strategy, and
+:func:`defrag_victims` orders which running jobs a fragmentation-driven
+repack may move.
 """
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import List, Optional, Sequence, Tuple
 
+from repro.core.job import TIER_HIGH, Job
 from repro.core.leaves import Cluster, Instance
 
 
@@ -78,3 +85,40 @@ def choose_host(cluster: Cluster, size: int) -> Optional[int]:
         if idle >= size and idle > best_idle:
             best, best_idle = h, idle
     return best
+
+
+# ---------------------------------------------------------------------------
+# cluster-runtime placement policy (host-level analogue of the above)
+# ---------------------------------------------------------------------------
+
+def cluster_placement(priority_tier: int, size: int,
+                      devices_per_host: int
+                      ) -> Tuple[str, Optional[int]]:
+    """Device-pool placement for one cluster job: ``(strategy,
+    required host span)``.
+
+    - Tier-0 (high/SLA) jobs that fit on one host are *pinned* to a
+      single host (span 1): single-host transport is the latency tier
+      they pay for, so a cross-host placement is not an acceptable
+      fallback — they queue (and force a defrag repack) instead.
+    - Everyone else spreads round-robin across hosts (the Fig.-9
+      balanced default: widest equal per-host split).
+    """
+    if priority_tier == TIER_HIGH and size <= devices_per_host:
+        return "packed", 1
+    return "round_robin", None
+
+
+def defrag_victims(running: Sequence[Job], requester: Job) -> List[Job]:
+    """Which running jobs a defrag repack may move to admit
+    ``requester``, best victim first.
+
+    Only jobs at the requester's priority tier or below are movable (a
+    repack must never perturb a *higher*-priority tenant on behalf of a
+    lower one); among those, lowest priority first, then smallest state
+    (size) — the cheapest checkpoint/restore cycle.  Stable, so equal
+    candidates keep arrival order.
+    """
+    eligible = [j for j in running
+                if j.priority_tier >= requester.priority_tier]
+    return sorted(eligible, key=lambda j: (-j.priority_tier, j.size))

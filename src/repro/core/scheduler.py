@@ -3,13 +3,22 @@
 FIFO examines only the queue head; Aggressive Backfilling examines up to
 ``depth`` candidates (14 in the paper's configuration) and places any that
 fit.  The scheduler is mode-agnostic: modes answer placement queries.
+
+Multi-tenant extension (cluster runtime): a scheduler may be armed with
+per-tenant device quotas (``quotas``) and then filters candidates whose
+tenant is at quota given the caller's current ``usage``; priority tiers
+(:attr:`repro.core.job.Job.priority_tier`) order the candidate window
+highest tier first.  Both are strictly opt-in — without quotas and with
+all jobs on the default tier, ``candidates`` returns exactly what it
+always returned (the ordering sort is stable), so every existing golden
+replay is bit-identical.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Dict, List, Mapping, Optional
 
-from repro.core.job import Job
+from repro.core.job import TIER_NORMAL, Job
 
 
 @dataclasses.dataclass
@@ -30,16 +39,43 @@ class WaitQueue:
 
 
 class Scheduler:
-    """policy='fifo' | 'backfill'."""
+    """policy='fifo' | 'backfill'.
 
-    def __init__(self, policy: str = "fifo", depth: int = 14):
+    ``quotas`` maps tenant -> maximum concurrently-held device count
+    (job sizes).  A job whose tenant would exceed its quota is invisible
+    to :meth:`candidates` for that pass; tenants without an entry are
+    unrestricted.  Quota filtering only happens when the caller supplies
+    ``usage`` (tenant -> devices currently held), so pure replay paths
+    that never pass usage are unaffected.
+    """
+
+    def __init__(self, policy: str = "fifo", depth: int = 14,
+                 quotas: Optional[Mapping[str, int]] = None):
         assert policy in ("fifo", "backfill")
         self.policy = policy
         self.depth = depth
+        self.quotas: Dict[str, int] = dict(quotas) if quotas else {}
 
-    def candidates(self, queue: WaitQueue) -> List[Job]:
+    def admissible(self, job: Job, usage: Mapping[str, int]) -> bool:
+        """Would starting ``job`` keep its tenant within quota?"""
+        quota = self.quotas.get(job.tenant)
+        if quota is None:
+            return True
+        return usage.get(job.tenant, 0) + job.size <= quota
+
+    def candidates(self, queue: WaitQueue,
+                   usage: Optional[Mapping[str, int]] = None) -> List[Job]:
         if not queue:
             return []
+        jobs = queue.jobs
+        if usage is not None and self.quotas:
+            jobs = [j for j in jobs if self.admissible(j, usage)]
+        # highest priority tier first; stable, so the all-default-tier
+        # case preserves submission order exactly (goldens unchanged) —
+        # and skips the sort entirely, keeping the common single-tier
+        # replay path at its original slice cost
+        if any(j.priority_tier != TIER_NORMAL for j in jobs):
+            jobs = sorted(jobs, key=lambda j: j.priority_tier)
         if self.policy == "fifo":
-            return [queue.jobs[0]]
-        return queue.jobs[:self.depth]
+            return jobs[:1]
+        return jobs[:self.depth]

@@ -214,7 +214,17 @@ class Simulation:
             # at most once per round instead of per blocked candidate
             # (quadratic on large traces otherwise)
             idle_slices: Optional[int] = None
-            for job in list(self.scheduler.candidates(self.queue)):
+            # per-tenant device usage, computed only when the scheduler
+            # is armed with quotas (the default replay path never builds
+            # it, keeping the quota-free simulator bit-identical)
+            usage: Optional[Dict[str, int]] = None
+            if self.scheduler.quotas:
+                usage = {}
+                for rec in self.running.values():
+                    usage[rec.job.tenant] = (
+                        usage.get(rec.job.tenant, 0) + rec.job.size)
+            for job in list(self.scheduler.candidates(self.queue,
+                                                      usage=usage)):
                 res = self.mode.try_place(job, self.cluster)
                 if isinstance(res, Placement):
                     self.queue.remove(job)
@@ -510,7 +520,8 @@ def simulate(jobs: List[Job], mode_name: str, *, n_hosts: int = 1,
              round_robin: bool = True,
              reconfig_mode: Optional[str] = None,
              reconfig_cost: Optional[jct_model.ReconfigCostModel] = None,
-             failure_model: Optional[FailureModel] = None
+             failure_model: Optional[FailureModel] = None,
+             tenant_quotas: Optional[Dict[str, int]] = None
              ) -> SimResult:
     """Replay ``jobs`` under operation mode ``mode_name``.
 
@@ -528,6 +539,11 @@ def simulate(jobs: List[Job], mode_name: str, *, n_hosts: int = 1,
     ``failure_model`` arms seeded MTBF host failures (see
     :class:`FailureModel`); without one the run is bit-identical to the
     failure-free simulator — the failure plane is strictly opt-in.
+
+    ``tenant_quotas`` maps tenant -> max concurrently-held devices; a
+    job whose tenant is at quota waits even when resources are free.
+    Strictly opt-in like the failure plane: ``None`` (the default)
+    never computes usage and replays bit-identically.
     """
     import copy
     jobs = copy.deepcopy(jobs)
@@ -541,7 +557,8 @@ def simulate(jobs: List[Job], mode_name: str, *, n_hosts: int = 1,
             f"cost model's mode={reconfig_cost.mode!r}")
     sim = Simulation(jobs, make_mode(mode_name, **kw),
                      n_hosts=n_hosts, gpus_per_host=gpus_per_host,
-                     scheduler=Scheduler(policy, depth=backfill_depth),
+                     scheduler=Scheduler(policy, depth=backfill_depth,
+                                         quotas=tenant_quotas),
                      calibrate=calibrate, ground_truth=ground_truth,
                      reconfig_cost=reconfig_cost,
                      failure_model=failure_model, seed=seed)

@@ -17,7 +17,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.jct_model import WORKLOADS
-from repro.core.job import Job
+from repro.core.job import DEFAULT_TENANT, TIER_NORMAL, Job
 
 DURATION_BUCKETS = {
     "short": (600.0, 1800.0),
@@ -97,12 +97,19 @@ ALL_CATEGORIES: Tuple[TraceCategory, ...] = tuple(
 
 def generate_trace(cat: TraceCategory, *, seed: int = 0,
                    double: bool = False, max_size: Optional[int] = None,
-                   mean_interarrival: float = 30.0) -> List[Job]:
+                   mean_interarrival: float = 30.0,
+                   n_tenants: int = 1) -> List[Job]:
     """One synthetic trace for a category.
 
     ``double=True`` doubles the Table-2 job counts (§5.1 Metrics).
     ``max_size`` folds larger sizes down (Fig. 7 uses max 4 so SM is
     comparable).  Arrivals are open-loop (exponential interarrivals).
+
+    ``n_tenants > 1`` assigns jobs round-robin (by arrival index) to
+    tenants ``t0..t{n-1}``.  The assignment consumes no rng draws, so a
+    multi-tenant trace is the single-tenant trace with tenant labels
+    painted on — every other field, and therefore every quota-free
+    replay, is bit-identical.
     """
     rng = np.random.default_rng(seed)
     mix = DURATION_SOURCES[cat.duration_source]
@@ -138,7 +145,95 @@ def generate_trace(cat: TraceCategory, *, seed: int = 0,
         model = str(rng.choice(choices)) if choices else "efficientnet-b2"
         batch = _pick_batch(model, kind, rng)
         t += float(rng.exponential(mean_interarrival))
+        tenant = (f"t{i % n_tenants}" if n_tenants > 1
+                  else DEFAULT_TENANT)
         jobs.append(Job(job_id=f"j{i:04d}", model=model, kind=kind,
                         size=size, batch=batch, base_duration=duration,
-                        submit_time=t))
+                        submit_time=t, tenant=tenant))
     return jobs
+
+
+# ---------------------------------------------------------------------------
+# trace files (CSV) — the executable cluster runtime's input format
+# ---------------------------------------------------------------------------
+
+# required columns, in canonical order; ``tenant`` and ``priority_tier``
+# are optional trailing columns (absent in every pre-multi-tenant trace
+# file, whose rows keep parsing to byte-identical Jobs)
+TRACE_COLUMNS = ("job_id", "model", "kind", "size", "batch",
+                 "base_duration", "submit_time")
+TRACE_OPTIONAL_COLUMNS = ("tenant", "priority_tier")
+
+
+def parse_trace(text: str) -> List[Job]:
+    """Parse a CSV trace (header + rows) into :class:`Job` records.
+
+    The header must name every column in :data:`TRACE_COLUMNS` and may
+    additionally name ``tenant`` / ``priority_tier``; rows without the
+    optional columns get the single-tenant defaults, so loading an old
+    trace file replays bit-identically.
+    """
+    import csv
+    import io
+
+    rows = list(csv.reader(io.StringIO(text)))
+    rows = [r for r in rows if r and any(c.strip() for c in r)]
+    if not rows:
+        return []
+    header = [c.strip() for c in rows[0]]
+    missing = [c for c in TRACE_COLUMNS if c not in header]
+    if missing:
+        raise ValueError(f"trace header is missing columns {missing}; "
+                         f"got {header}")
+    unknown = [c for c in header
+               if c not in TRACE_COLUMNS + TRACE_OPTIONAL_COLUMNS]
+    if unknown:
+        raise ValueError(f"trace header has unknown columns {unknown}")
+    idx = {c: header.index(c) for c in header}
+    jobs: List[Job] = []
+    for lineno, row in enumerate(rows[1:], start=2):
+        if len(row) != len(header):
+            raise ValueError(
+                f"trace line {lineno}: {len(row)} fields, header has "
+                f"{len(header)}")
+
+        def col(name, default=None):
+            return row[idx[name]].strip() if name in idx else default
+
+        jobs.append(Job(
+            job_id=col("job_id"), model=col("model"), kind=col("kind"),
+            size=int(col("size")), batch=int(col("batch")),
+            base_duration=float(col("base_duration")),
+            submit_time=float(col("submit_time")),
+            tenant=col("tenant", DEFAULT_TENANT) or DEFAULT_TENANT,
+            priority_tier=int(col("priority_tier", TIER_NORMAL)
+                              or TIER_NORMAL)))
+    return jobs
+
+
+def load_trace(path: str) -> List[Job]:
+    with open(path) as f:
+        return parse_trace(f.read())
+
+
+def trace_to_csv(jobs: List[Job], *,
+                 include_tenancy: Optional[bool] = None) -> str:
+    """Serialize jobs as a CSV trace (round-trips with
+    :func:`parse_trace`).  ``include_tenancy=None`` auto-detects: the
+    tenant/priority columns are written only when some job departs from
+    the single-tenant defaults, so single-tenant traces keep the
+    original column set."""
+    if include_tenancy is None:
+        include_tenancy = any(j.tenant != DEFAULT_TENANT
+                              or j.priority_tier != TIER_NORMAL
+                              for j in jobs)
+    cols = TRACE_COLUMNS + (TRACE_OPTIONAL_COLUMNS if include_tenancy
+                            else ())
+    lines = [",".join(cols)]
+    for j in jobs:
+        row = [j.job_id, j.model, j.kind, str(j.size), str(j.batch),
+               repr(j.base_duration), repr(j.submit_time)]
+        if include_tenancy:
+            row += [j.tenant, str(j.priority_tier)]
+        lines.append(",".join(row))
+    return "\n".join(lines) + "\n"

@@ -174,6 +174,17 @@ class ElasticRunResult:
     steady_step_s: float
     start_step: int = 0                   # > 0 on a restart-resume
     recovery: Optional[RecoveryReport] = None
+    # boundary timings for runs that are one *segment* of a longer job
+    # (the cluster runtime splits a job into segment subprocesses and
+    # stitches segment k's final save + segment k+1's resume restore
+    # into one cross-process handoff measurement)
+    state_bytes: int = 0                  # logical training-state size
+    first_step_s: float = 0.0             # first executed step (incl jit)
+    final_save_s: float = 0.0             # final_save wallclock
+    final_save_bytes: int = 0
+    resume_restore_s: float = 0.0         # resume: restore wallclock
+    resume_restore_bytes: int = 0
+    resume_setup_s: float = 0.0           # resume: new-mesh state build
 
 
 @dataclasses.dataclass
@@ -242,6 +253,9 @@ class ElasticDriver:
         # previous one instead of raising
         self.retry = retry
         self.fallback_on_corrupt = fallback_on_corrupt
+        # set by _restore_into; on a resumed run the last successful
+        # restore attempt's timings are the segment's receiving-half cost
+        self._resume_timing: Optional[Dict[str, Any]] = None
 
     # ----------------------------------------------------------- setup
     def _setup(self, shape: Tuple[int, int], seed: int) -> _MeshCtx:
@@ -292,13 +306,25 @@ class ElasticDriver:
     def _restore_into(self, path: str, step: int, shape: Tuple[int, int],
                       seed: int) -> _MeshCtx:
         """Build a fresh mesh context for ``shape`` and restore committed
-        step ``step`` into it (format-dispatched, reshard-capable)."""
+        step ``step`` into it (format-dispatched, reshard-capable).
+
+        Times both phases into ``_resume_timing`` — on a resumed run this
+        restore is the *receiving* half of a cross-process handoff, and
+        the cluster runtime calibrates from it."""
+        t0 = time.perf_counter()
         ctx = self._setup(shape, seed)
+        setup_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
         rstep, (ctx.params, ctx.state) = ckpt_lib.restore_auto(
             path, (ctx.params, ctx.state),
             shardings=(None, ctx.opt_shardings),
             layout=ctx.layout if self.mode == "handoff" else None,
             retry=self.retry)
+        self._resume_timing = {
+            "setup_s": setup_s,
+            "restore_s": time.perf_counter() - t0,
+            "restore_bytes": _dir_bytes(path),
+        }
         if rstep != step:
             raise ckpt_lib.CorruptCheckpointError(
                 f"checkpoint at {path!r} records step {rstep}, directory "
@@ -497,6 +523,7 @@ class ElasticDriver:
         shapes: List[Tuple[int, int]] = []
         measurements: List[HandoffMeasurement] = []
         step_times: List[float] = []      # non-first steps per segment
+        run_first_step_s = 0.0            # very first executed step
         first_step = True
         for step in range(start_step, n_steps):
             if step in events:
@@ -520,20 +547,38 @@ class ElasticDriver:
             if first_step:
                 if measurements and measurements[-1].first_step_s == 0.0:
                     measurements[-1].first_step_s = dt
+                if step == start_step:
+                    run_first_step_s = dt
                 first_step = False
             else:
                 step_times.append(dt)
             losses.append(float(metrics["loss"]))
             shapes.append(ctx.shape)
+        final_save_s = 0.0
+        final_save_bytes = 0
         if final_save:
+            t0 = time.perf_counter()
             self._save(ctx, n_steps)
+            final_save_s = time.perf_counter() - t0
+            final_save_bytes = _dir_bytes(
+                ckpt_lib.step_dir(self.base_dir, n_steps))
         # recompile cost = first post-handoff step minus the steady step
         # time (the jit cache is cold on every new factorization)
         steady = statistics.median(step_times) if step_times else 0.0
         for m in measurements:
             m.compile_s = max(0.0, m.first_step_s - steady)
+        rt = (self._resume_timing or {}) if resume else {}
         return ElasticRunResult(losses=losses, measurements=measurements,
                                 mesh_shapes=shapes, params=ctx.params,
                                 opt_state=ctx.state,
                                 steady_step_s=steady,
-                                start_step=start_step, recovery=recovery)
+                                start_step=start_step, recovery=recovery,
+                                state_bytes=_tree_bytes(
+                                    (ctx.params, ctx.state)),
+                                first_step_s=run_first_step_s,
+                                final_save_s=final_save_s,
+                                final_save_bytes=final_save_bytes,
+                                resume_restore_s=rt.get("restore_s", 0.0),
+                                resume_restore_bytes=rt.get(
+                                    "restore_bytes", 0),
+                                resume_setup_s=rt.get("setup_s", 0.0))

@@ -9,13 +9,15 @@ their injection points.  The *recovery* half
 and the kill harness (:mod:`repro.faults.harness`) sits above both —
 consumers import those submodules explicitly.
 """
-from repro.faults.plan import (ENV_VAR, KINDS, FaultPlan, FaultSpec,
-                               FiredFault, active_plan, install,
-                               install_from_env, maybe_fire)
+from repro.faults.plan import (ENV_VAR, JOB_ENV_VAR, KINDS, FaultPlan,
+                               FaultSpec, FiredFault, active_plan,
+                               install, install_from_env, maybe_fire,
+                               plans_to_env)
 from repro.faults.retry import (NO_RETRY, TRANSIENT_ERRNOS, RetryPolicy)
 
 __all__ = [
-    "ENV_VAR", "KINDS", "FaultPlan", "FaultSpec", "FiredFault",
-    "active_plan", "install", "install_from_env", "maybe_fire",
+    "ENV_VAR", "JOB_ENV_VAR", "KINDS", "FaultPlan", "FaultSpec",
+    "FiredFault", "active_plan", "install", "install_from_env",
+    "maybe_fire", "plans_to_env",
     "NO_RETRY", "TRANSIENT_ERRNOS", "RetryPolicy",
 ]

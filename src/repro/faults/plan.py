@@ -62,6 +62,11 @@ import numpy as np
 
 ENV_VAR = "REPRO_FAULT_PLAN"
 
+# which job a cluster child *is* — set by the cluster runtime's
+# JobManager so a namespaced fault plan (see plans_to_env) only arms in
+# the subprocess it targets
+JOB_ENV_VAR = "REPRO_JOB_ID"
+
 KINDS = ("enospc", "eio", "truncate", "bitflip", "crash")
 
 # .npy files put their header in the first ~128 bytes; corrupting past it
@@ -203,14 +208,45 @@ def install(plan: FaultPlan):
         _ACTIVE = prev
 
 
-def install_from_env() -> Optional[FaultPlan]:
-    """Arm the plan serialized in ``$REPRO_FAULT_PLAN`` (kill-harness
-    children call this first thing; no-op without the variable).  The
-    plan stays armed for the life of the process — crash specs make the
-    process not outlive them anyway."""
+def plans_to_env(plans: Dict[str, FaultPlan]) -> str:
+    """Serialize a *namespaced* plan set — one plan per job id — for a
+    multi-job (cluster) environment.  Every cluster child inherits the
+    same ``$REPRO_FAULT_PLAN``; :func:`install_from_env` arms only the
+    entry matching the child's own job id, so a plan aimed at one job
+    can never fire inside its co-scheduled neighbors."""
+    return json.dumps({"jobs": {jid: json.loads(p.to_env())
+                                for jid, p in plans.items()}})
+
+
+def install_from_env(job_id: Optional[str] = None) -> Optional[FaultPlan]:
+    """Arm the plan serialized in ``$REPRO_FAULT_PLAN`` (kill-harness and
+    cluster children call this first thing; no-op without the variable).
+    The plan stays armed for the life of the process — crash specs make
+    the process not outlive them anyway.
+
+    Two wire formats:
+
+    - legacy single plan (top-level ``specs``): armed unconditionally,
+      exactly as before — the single-job kill harness's path;
+    - namespaced (top-level ``jobs``: job id -> plan, from
+      :func:`plans_to_env`): only the entry for this process's job id is
+      armed.  ``job_id`` defaults to ``$REPRO_JOB_ID``; a process with
+      no job id, or one no entry targets, arms nothing.
+    """
     global _ACTIVE
     value = os.environ.get(ENV_VAR)
     if not value:
         return None
+    d = json.loads(value)
+    if "jobs" in d:
+        if job_id is None:
+            job_id = os.environ.get(JOB_ENV_VAR)
+        entry = d["jobs"].get(job_id) if job_id is not None else None
+        if entry is None:
+            return None
+        _ACTIVE = FaultPlan(
+            [FaultSpec.from_dict(s) for s in entry["specs"]],
+            seed=int(entry.get("seed", 0)))
+        return _ACTIVE
     _ACTIVE = FaultPlan.from_env(value)
     return _ACTIVE

@@ -52,7 +52,8 @@ from repro.collectives import deterministic as det
 from repro.collectives.hierarchical import hier_all_reduce_mean
 from repro.data import DataConfig, Prefetcher, SyntheticCorpus
 from repro.elastic import HeartbeatMonitor, StragglerDetector
-from repro.sharding import MeshRules, grad_sync_axes, use_rules
+from repro.sharding import (MeshRules, grad_sync_axes, use_rules,
+                            without_axes)
 
 MANUAL_SYNC_MODES = ("hier", "hier_bucketed", "hier_bucketed_zero1")
 BUCKETED_SYNC_MODES = ("hier_bucketed", "hier_bucketed_zero1")
@@ -271,6 +272,25 @@ def _make_manual_sync_step(model, ocfg: optim.AdamWConfig, *, accum: int,
     dt = deterministic_reduce
     lg = make_loss_and_grad(model, accum=accum)
 
+    # inside the shard_map body the sync axes are mapped manually, so
+    # model-code sharding constraints must not mention them.  Newer JAX
+    # exposes the manual set for shard() to drop at trace time, but on
+    # versions without that introspection the full ambient rules leak
+    # through — visible only when a per-rank dim happens to be divisible
+    # by the mesh size (e.g. any 2-rank mesh with per-rank batch 4), at
+    # which point the partitioner rejects the constraint.  Stripping the
+    # manual axes from the ambient rules is the version-independent fix;
+    # per-rank the surviving constraints are all-None, exactly what the
+    # divisibility check produced on the previously-working shapes.
+    body_rules = (without_axes(rules, frozenset(sync_axes))
+                  if rules is not None and sync_axes else rules)
+
+    def manual_body(fn):
+        def wrapped(*args):
+            with use_rules(body_rules):
+                return fn(*args)
+        return wrapped
+
     def mean_loss(loss):
         if not sync_axes:
             return loss
@@ -388,7 +408,8 @@ def _make_manual_sync_step(model, ocfg: optim.AdamWConfig, *, accum: int,
                 state_specs = EFState(state_specs, residual_specs(layout))
             pspecs = jax.tree.map(lambda _: P(), params)
             return PX.shard_map(
-                functools.partial(zero1_rank, layout), mesh=mesh,
+                manual_body(functools.partial(zero1_rank, layout)),
+                mesh=mesh,
                 in_specs=(pspecs, state_specs, batch_specs(batch)),
                 out_specs=(pspecs, state_specs,
                            {"loss": P(), "lr": P(), "grad_norm": P()}),
@@ -412,7 +433,7 @@ def _make_manual_sync_step(model, ocfg: optim.AdamWConfig, *, accum: int,
             pspecs = jax.tree.map(lambda _: P(), params)
             rspecs = residual_specs(layout)
             loss, grads, gnorm, new_res = PX.shard_map(
-                bucketed_rank, mesh=mesh,
+                manual_body(bucketed_rank), mesh=mesh,
                 in_specs=(pspecs, batch_specs(batch), rspecs),
                 out_specs=(P(), pspecs, P(), rspecs),
                 check_vma=False, axis_names=set(sync_axes),
@@ -420,7 +441,7 @@ def _make_manual_sync_step(model, ocfg: optim.AdamWConfig, *, accum: int,
         else:
             pspecs = jax.tree.map(lambda _: P(), params)
             loss, grads = PX.shard_map(
-                hier_rank, mesh=mesh,
+                manual_body(hier_rank), mesh=mesh,
                 in_specs=(pspecs, batch_specs(batch)),
                 out_specs=(P(), pspecs),
                 check_vma=False, axis_names=set(sync_axes),

@@ -1,0 +1,264 @@
+"""Multi-tenant cluster runtime (repro.cluster.runtime).
+
+Two layers:
+
+- **FakeManager units**: the scheduling/repack/crash state machine
+  driven by an instant in-process segment manager — admission order,
+  quota serialization, `after` arrival gating, defrag + rebalance
+  repacks, crash bookkeeping, deadlock detection;
+- **real co-scheduled smokes**: subprocess workers over a shared
+  fake-device pool — the 3-job/2-tenant contention scenario with both
+  repack kinds and cross-job bitwise invariance, and a namespaced
+  crash fault that restarts exactly the job it targets.
+"""
+import pytest
+
+from repro.cluster import (ClusterError, ClusterJobSpec, ClusterRuntime,
+                           DevicePool, SegmentResult)
+from repro.core.job import TIER_HIGH
+from repro.core.scheduler import Scheduler
+from repro.faults.plan import FaultPlan, FaultSpec
+
+
+class FakeManager:
+    """Instant JobManager stand-in: every poll after a launch completes
+    the segment (or crashes it, per ``crash_at``) with deterministic
+    synthetic losses — the runtime's control flow runs at unit-test
+    speed with zero subprocesses."""
+
+    def __init__(self, spec, work_dir, *, crash_at=()):
+        self.spec = spec
+        self.crash_at = set(crash_at)         # {(segment, attempt)}
+        self.segment = 0
+        self.attempt = 0
+        self.restarts = 0
+        self.done_step = 0
+        self.results = []
+        self.launches = []                    # [(shape, fault_env)]
+        self._pending = None
+
+    @property
+    def finished(self):
+        return self.done_step >= self.spec.n_steps
+
+    def next_run_to(self):
+        return min(self.done_step + self.spec.segment_steps,
+                   self.spec.n_steps)
+
+    def launch(self, shape, *, fault_env=None):
+        assert shape[0] * shape[1] == self.spec.size
+        self.launches.append((shape, fault_env))
+        self._pending = shape
+
+    def poll(self):
+        if self._pending is None:
+            return None
+        shape = self._pending
+        self._pending = None
+        if (self.segment, self.attempt) in self.crash_at:
+            return ("crash", -9)
+        start, end = self.done_step, self.next_run_to()
+        res = SegmentResult(
+            job_id=self.spec.job_id, segment=self.segment,
+            attempt=self.attempt, start_step=start, end_step=end,
+            shape=shape,
+            losses=[1000.0 * self.spec.seed + s
+                    for s in range(start, end)],
+            steady_step_s=0.01, first_step_s=0.05,
+            state_bytes=1000 * self.spec.size, final_save_s=0.02,
+            final_save_bytes=500, resume_restore_s=0.01,
+            resume_restore_bytes=500, resume_setup_s=0.005,
+            recovered_step=None)
+        self.results.append(res)
+        self.done_step = end
+        self.segment += 1
+        self.attempt = 0
+        return ("ok", res)
+
+    def note_crash(self):
+        self.attempt += 1
+        self.restarts += 1
+
+    def tail_log(self, n=2000):
+        return "<fake>"
+
+
+def _run(specs, tmp_path, **kw):
+    kw.setdefault("pool", DevicePool(2, 4))
+    kw.setdefault("manager_factory", FakeManager)
+    rt = ClusterRuntime(specs, base_dir=str(tmp_path), **kw)
+    return rt, rt.run()
+
+
+# -------------------------------------------------------- fake units
+
+def test_two_jobs_run_side_by_side(tmp_path):
+    specs = [ClusterJobSpec("a", size=4, n_steps=4, segment_steps=2),
+             ClusterJobSpec("b", size=4, n_steps=4, segment_steps=2)]
+    _, res = _run(specs, tmp_path)
+    assert set(res.jobs) == {"a", "b"}
+    assert res.jobs["a"].losses == [0.0, 1.0, 2.0, 3.0]
+    assert res.repacks == []
+    # one stitched boundary measurement per job
+    assert [m["job_id"] for m in res.measurements] == ["a", "b"]
+    assert all(not m["repack"] for m in res.measurements)
+
+
+def test_contention_scenario_defrag_then_rebalance(tmp_path):
+    specs = [
+        ClusterJobSpec("j0", size=4, n_steps=15, segment_steps=3,
+                       tenant="acme"),
+        ClusterJobSpec("j1", size=2, n_steps=2, segment_steps=2,
+                       tenant="beta"),
+        ClusterJobSpec("j2", size=4, n_steps=2, segment_steps=2,
+                       tenant="beta", priority_tier=TIER_HIGH,
+                       after="j1"),
+    ]
+    _, res = _run(specs, tmp_path,
+                  scheduler=Scheduler("backfill", depth=8,
+                                      quotas={"beta": 6}))
+    reasons = [r.reason for r in res.repacks]
+    assert "defrag" in reasons and "rebalance" in reasons
+    defrag = res.repacks[reasons.index("defrag")]
+    assert defrag.job_id == "j0" and defrag.requested_by == "j2"
+    assert defrag.to_shape == (1, 4)          # consolidated to one host
+    # j0 went wide -> packed -> back wide; every step executed exactly
+    # once across the repacks
+    shapes = res.jobs["j0"].shapes
+    assert shapes[0] == (2, 2) and (1, 4) in shapes
+    assert shapes[-1] == (2, 2)
+    assert res.jobs["j0"].losses == [float(s) for s in range(15)]
+    # the tier-0 job landed single-host
+    assert res.jobs["j2"].shapes == [(1, 4)]
+    # repack boundaries are visible in the stitched measurements
+    assert any(m["repack"] for m in res.measurements)
+
+
+def test_quota_serializes_tenant(tmp_path):
+    seen = []
+
+    class Recording(Scheduler):
+        def candidates(self, queue, usage=None):
+            seen.append(dict(usage or {}))
+            return super().candidates(queue, usage=usage)
+
+    specs = [ClusterJobSpec("b1", size=2, n_steps=2, tenant="beta"),
+             ClusterJobSpec("b2", size=2, n_steps=2, tenant="beta")]
+    _, res = _run(specs, tmp_path, pool=DevicePool(1, 4),
+                  scheduler=Recording("backfill", depth=8,
+                                      quotas={"beta": 2}))
+    assert len(res.jobs) == 2
+    assert max(u.get("beta", 0) for u in seen) <= 2
+
+
+def test_after_gates_arrival(tmp_path):
+    specs = [ClusterJobSpec("first", size=2, n_steps=2),
+             ClusterJobSpec("second", size=2, n_steps=2,
+                            after="first")]
+    rt, res = _run(specs, tmp_path, pool=DevicePool(1, 2))
+    assert set(res.jobs) == {"first", "second"}
+    assert ClusterJobSpec("x", size=1, n_steps=1).after is None
+
+
+def test_crash_relaunches_then_succeeds(tmp_path):
+    def factory(spec, wd):
+        return FakeManager(spec, wd, crash_at={(1, 0)}
+                           if spec.job_id == "a" else ())
+
+    specs = [ClusterJobSpec("a", size=2, n_steps=4, segment_steps=2),
+             ClusterJobSpec("b", size=2, n_steps=4, segment_steps=2)]
+    _, res = _run(specs, tmp_path, manager_factory=factory)
+    assert res.jobs["a"].restarts == 1
+    assert res.jobs["b"].restarts == 0
+    assert res.jobs["a"].losses == [0.0, 1.0, 2.0, 3.0]
+
+
+def test_crash_beyond_max_restarts_raises(tmp_path):
+    def factory(spec, wd):
+        return FakeManager(spec, wd,
+                           crash_at={(0, 0), (0, 1), (0, 2)})
+
+    specs = [ClusterJobSpec("a", size=2, n_steps=2)]
+    with pytest.raises(ClusterError, match="giving up"):
+        _run(specs, tmp_path, manager_factory=factory, max_restarts=2)
+
+
+def test_quota_smaller_than_job_is_a_deadlock(tmp_path):
+    specs = [ClusterJobSpec("a", size=4, n_steps=2, tenant="beta")]
+    with pytest.raises(ClusterError, match="deadlock"):
+        _run(specs, tmp_path,
+             scheduler=Scheduler("fifo", quotas={"beta": 2}))
+
+
+def test_spec_validation():
+    with pytest.raises(ClusterError, match="duplicate"):
+        ClusterRuntime([ClusterJobSpec("a", size=2, n_steps=2),
+                        ClusterJobSpec("a", size=2, n_steps=2)],
+                       pool=DevicePool(2, 4), base_dir="/tmp/x")
+    with pytest.raises(ClusterError, match="exceeds the pool"):
+        ClusterRuntime([ClusterJobSpec("a", size=16, n_steps=2)],
+                       pool=DevicePool(2, 4), base_dir="/tmp/x")
+    with pytest.raises(ClusterError, match="names no submitted"):
+        ClusterRuntime([ClusterJobSpec("a", size=2, n_steps=2,
+                                       after="ghost")],
+                       pool=DevicePool(2, 4), base_dir="/tmp/x")
+    with pytest.raises(ValueError):
+        ClusterJobSpec("bad", size=0, n_steps=2)
+
+
+# ---------------------------------------------------- real subprocess
+
+def test_cluster_smoke_multidevice(tmp_path):
+    """The contention scenario end-to-end with real workers: 3 jobs,
+    2 tenants, both repack kinds, per-tenant quota, and the bitwise
+    invariant crossing jobs — j2 (tier-0, admitted by the defrag) runs
+    the same width/config/seed as j0, so its 2 losses must equal j0's
+    first 2 exactly, repacks and all."""
+    specs = [
+        ClusterJobSpec("j0", size=4, n_steps=15, segment_steps=3,
+                       tenant="acme"),
+        ClusterJobSpec("j1", size=2, n_steps=2, segment_steps=2,
+                       tenant="beta"),
+        ClusterJobSpec("j2", size=4, n_steps=2, segment_steps=2,
+                       tenant="beta", priority_tier=TIER_HIGH,
+                       after="j1"),
+    ]
+    rt = ClusterRuntime(
+        specs, pool=DevicePool(2, 4), base_dir=str(tmp_path),
+        scheduler=Scheduler("backfill", depth=8, quotas={"beta": 6}),
+        timeout_s=500.0)
+    res = rt.run()
+
+    reasons = [r.reason for r in res.repacks]
+    assert len(res.repacks) >= 2
+    assert "defrag" in reasons
+    defrag = res.repacks[reasons.index("defrag")]
+    assert defrag.job_id == "j0" and defrag.requested_by == "j2"
+    for jid, spec in (("j0", specs[0]), ("j1", specs[1]),
+                      ("j2", specs[2])):
+        assert len(res.jobs[jid].losses) == spec.n_steps
+    assert res.jobs["j2"].losses == res.jobs["j0"].losses[:2]
+    # measured handoffs exist and carry the stitched fields
+    assert res.measurements
+    m = res.measurements[0]
+    assert m["save_s"] > 0 and m["restore_s"] > 0
+    assert m["state_bytes"] > 0 and m["save_bytes"] > 0
+
+
+def test_cluster_fault_restarts_only_target_multidevice(tmp_path):
+    """A namespaced crash plan SIGKILLs j_a's first step; the runtime
+    relaunches it (fresh start — nothing was committed) while j_b runs
+    on untouched, and both finish with identical losses (same seed and
+    width, so the restarted job must converge bitwise)."""
+    specs = [ClusterJobSpec("j_a", size=2, n_steps=2),
+             ClusterJobSpec("j_b", size=2, n_steps=2)]
+    rt = ClusterRuntime(
+        specs, pool=DevicePool(1, 4), base_dir=str(tmp_path),
+        fault_plans={"j_a": FaultPlan(
+            [FaultSpec("driver.first_step", "crash", hit=1)])},
+        timeout_s=400.0)
+    res = rt.run()
+    assert res.jobs["j_a"].restarts == 1
+    assert res.jobs["j_b"].restarts == 0
+    assert res.jobs["j_a"].losses == res.jobs["j_b"].losses
+    assert len(res.jobs["j_a"].losses) == 2

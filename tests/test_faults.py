@@ -412,3 +412,69 @@ def test_launcher_rejects_retries_without_resume():
 def test_launcher_rejects_negative_retries():
     with pytest.raises(SystemExit, match=">= 0"):
         _main_with(["--max-restore-retries", "-1"])
+
+
+# ------------------------------------------- namespaced (cluster) plans
+
+def test_plans_to_env_arms_only_matching_job(monkeypatch):
+    from repro.faults import plan as plan_mod
+
+    env = F.plans_to_env({
+        "j1": F.FaultPlan([F.FaultSpec("p", "eio")], seed=7),
+        "j2": F.FaultPlan([F.FaultSpec("q", "enospc")], seed=9),
+    })
+    monkeypatch.setenv(F.ENV_VAR, env)
+    prev = plan_mod._ACTIVE
+    try:
+        got = F.install_from_env("j1")
+        assert got is not None and got.seed == 7
+        assert [s.point for s in got.specs] == ["p"]
+        assert F.active_plan() is got
+        with pytest.raises(OSError):
+            F.maybe_fire("p")
+    finally:
+        plan_mod._ACTIVE = prev
+
+
+def test_plans_to_env_untargeted_job_arms_nothing(monkeypatch):
+    from repro.faults import plan as plan_mod
+
+    env = F.plans_to_env({"j1": F.FaultPlan([F.FaultSpec("p", "eio")])})
+    monkeypatch.setenv(F.ENV_VAR, env)
+    prev = plan_mod._ACTIVE
+    try:
+        plan_mod._ACTIVE = None
+        assert F.install_from_env("other") is None
+        assert F.active_plan() is None
+        F.maybe_fire("p")                     # neighbor: must not raise
+        # no job id at all (no $REPRO_JOB_ID either): also nothing
+        assert F.install_from_env() is None
+    finally:
+        plan_mod._ACTIVE = prev
+
+
+def test_install_from_env_job_id_defaults_to_env_var(monkeypatch):
+    from repro.faults import plan as plan_mod
+
+    env = F.plans_to_env({"me": F.FaultPlan([F.FaultSpec("p", "eio")])})
+    monkeypatch.setenv(F.ENV_VAR, env)
+    monkeypatch.setenv(F.JOB_ENV_VAR, "me")
+    prev = plan_mod._ACTIVE
+    try:
+        got = F.install_from_env()
+        assert got is not None and [s.point for s in got.specs] == ["p"]
+    finally:
+        plan_mod._ACTIVE = prev
+
+
+def test_install_from_env_legacy_format_arms_unconditionally(monkeypatch):
+    from repro.faults import plan as plan_mod
+
+    plan = F.FaultPlan([F.FaultSpec("p", "eio")], seed=3)
+    monkeypatch.setenv(F.ENV_VAR, plan.to_env())
+    prev = plan_mod._ACTIVE
+    try:
+        got = F.install_from_env("any-job-id")
+        assert got is not None and got.seed == 3
+    finally:
+        plan_mod._ACTIVE = prev

@@ -1,0 +1,116 @@
+"""Scheduler candidate selection (repro.core.scheduler).
+
+Backfill window edge cases (satellite of the cluster-runtime PR): a
+queue shorter than the depth, a head-of-line job that fits (backfill
+must not reorder it), the empty queue, and depth=1 — plus the
+multi-tenant extensions (per-tenant quotas, priority-tier ordering)
+and their strict opt-in guarantees.
+"""
+from repro.core.job import TIER_HIGH, TIER_NORMAL, Job
+from repro.core.scheduler import Scheduler, WaitQueue
+
+
+def _job(jid, size=2, tenant="t0", tier=TIER_NORMAL):
+    return Job(job_id=jid, model="m", kind="train", size=size, batch=8,
+               base_duration=1.0, tenant=tenant, priority_tier=tier)
+
+
+def _queue(*jobs):
+    q = WaitQueue()
+    for j in jobs:
+        q.push(j)
+    return q
+
+
+def _ids(jobs):
+    return [j.job_id for j in jobs]
+
+
+# ----------------------------------------------------- backfill window
+
+def test_backfill_queue_shorter_than_depth_keeps_order():
+    q = _queue(_job("a"), _job("b"), _job("c"))
+    got = Scheduler("backfill", depth=14).candidates(q)
+    assert _ids(got) == ["a", "b", "c"]
+
+
+def test_backfill_head_that_fits_stays_first():
+    # the head is a candidate like any other; backfill widens the
+    # window, it never reorders past a placeable head
+    q = _queue(_job("head", size=1), _job("tail", size=8))
+    got = Scheduler("backfill", depth=2).candidates(q)
+    assert _ids(got) == ["head", "tail"]
+
+
+def test_backfill_empty_queue():
+    assert Scheduler("backfill", depth=14).candidates(WaitQueue()) == []
+    assert Scheduler("fifo").candidates(WaitQueue()) == []
+
+
+def test_backfill_depth_one_degenerates_to_head():
+    q = _queue(_job("a"), _job("b"))
+    assert _ids(Scheduler("backfill", depth=1).candidates(q)) == ["a"]
+
+
+def test_backfill_truncates_to_depth():
+    q = _queue(*[_job(f"j{i}") for i in range(6)])
+    got = Scheduler("backfill", depth=4).candidates(q)
+    assert _ids(got) == ["j0", "j1", "j2", "j3"]
+
+
+def test_fifo_examines_only_the_head():
+    q = _queue(_job("a"), _job("b"))
+    assert _ids(Scheduler("fifo").candidates(q)) == ["a"]
+
+
+# ------------------------------------------------------ priority tiers
+
+def test_priority_tier_orders_window_stably():
+    q = _queue(_job("n1"), _job("hi1", tier=TIER_HIGH), _job("n2"),
+               _job("hi2", tier=TIER_HIGH))
+    got = Scheduler("backfill", depth=4).candidates(q)
+    # tier 0 first; submission order preserved within each tier
+    assert _ids(got) == ["hi1", "hi2", "n1", "n2"]
+
+
+def test_priority_tier_jumps_fifo_head():
+    q = _queue(_job("n1"), _job("hi", tier=TIER_HIGH))
+    assert _ids(Scheduler("fifo").candidates(q)) == ["hi"]
+
+
+def test_all_default_tiers_preserve_submission_order():
+    jobs = [_job(f"j{i}") for i in range(5)]
+    q = _queue(*jobs)
+    got = Scheduler("backfill", depth=8).candidates(q)
+    assert got == jobs                        # identical objects, order
+
+
+# ------------------------------------------------------------- quotas
+
+def test_quota_filters_only_with_usage():
+    sched = Scheduler("backfill", depth=8, quotas={"beta": 4})
+    q = _queue(_job("a", size=4, tenant="beta"),
+               _job("b", size=2, tenant="beta"),
+               _job("c", size=2, tenant="acme"))
+    # no usage supplied: replay paths see the unfiltered queue
+    assert _ids(sched.candidates(q)) == ["a", "b", "c"]
+    # beta already holds 2 of its 4: only the size-2 beta job fits
+    assert _ids(sched.candidates(q, usage={"beta": 2})) == ["b", "c"]
+    # at quota: beta disappears entirely
+    assert _ids(sched.candidates(q, usage={"beta": 4})) == ["c"]
+
+
+def test_quota_unlisted_tenant_unrestricted():
+    sched = Scheduler("fifo", quotas={"beta": 2})
+    q = _queue(_job("a", size=8, tenant="acme"))
+    assert _ids(sched.candidates(q, usage={"acme": 100})) == ["a"]
+    assert sched.admissible(_job("x", size=2, tenant="beta"),
+                            {"beta": 1}) is False
+    assert sched.admissible(_job("x", size=2, tenant="beta"),
+                            {}) is True
+
+
+def test_no_quotas_ignores_usage():
+    sched = Scheduler("backfill", depth=8)
+    q = _queue(_job("a", size=8, tenant="beta"))
+    assert _ids(sched.candidates(q, usage={"beta": 999})) == ["a"]

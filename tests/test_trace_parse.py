@@ -1,0 +1,82 @@
+"""CSV trace parsing + tenancy columns (repro.core.traces).
+
+The multi-tenant columns are strictly additive: old trace files (no
+``tenant``/``priority_tier`` columns) must parse to byte-identical
+Jobs, and the tenant-labelled generator must change nothing but the
+labels.
+"""
+import dataclasses
+
+import pytest
+
+from repro.core.job import DEFAULT_TENANT, TIER_HIGH, TIER_NORMAL
+from repro.core.traces import (TraceCategory, generate_trace,
+                               load_trace, parse_trace, trace_to_csv)
+
+LEGACY = """\
+job_id,model,kind,size,batch,base_duration,submit_time
+a,bert-large,train,4,32,1200.0,0.0
+b,resnet50,inference,1,8,600.0,30.0
+"""
+
+TENANTED = """\
+job_id,model,kind,size,batch,base_duration,submit_time,tenant,priority_tier
+a,bert-large,train,4,32,1200.0,0.0,acme,0
+b,resnet50,inference,1,8,600.0,30.0,beta,1
+"""
+
+
+def test_legacy_trace_gets_single_tenant_defaults():
+    jobs = parse_trace(LEGACY)
+    assert [j.job_id for j in jobs] == ["a", "b"]
+    assert all(j.tenant == DEFAULT_TENANT for j in jobs)
+    assert all(j.priority_tier == TIER_NORMAL for j in jobs)
+    assert jobs[0].size == 4 and jobs[0].base_duration == 1200.0
+
+
+def test_tenanted_trace_parses_optional_columns():
+    jobs = parse_trace(TENANTED)
+    assert jobs[0].tenant == "acme"
+    assert jobs[0].priority_tier == TIER_HIGH
+    assert jobs[1].tenant == "beta"
+    assert jobs[1].priority_tier == TIER_NORMAL
+
+
+def test_roundtrip_preserves_tenancy(tmp_path):
+    jobs = parse_trace(TENANTED)
+    path = tmp_path / "trace.csv"
+    path.write_text(trace_to_csv(jobs))
+    again = load_trace(str(path))
+    assert again == jobs
+
+
+def test_roundtrip_single_tenant_keeps_legacy_columns():
+    jobs = parse_trace(LEGACY)
+    out = trace_to_csv(jobs)
+    # auto-detect: all-default tenancy stays on the original column set
+    assert "tenant" not in out.splitlines()[0]
+    assert parse_trace(out) == jobs
+
+
+def test_parse_rejects_malformed():
+    with pytest.raises(ValueError, match="missing columns"):
+        parse_trace("job_id,model\nx,y\n")
+    with pytest.raises(ValueError, match="unknown columns"):
+        parse_trace(LEGACY.replace("submit_time",
+                                   "submit_time,color").
+                    replace(",0.0\n", ",0.0,red\n", 1))
+    with pytest.raises(ValueError, match="fields"):
+        parse_trace(LEGACY + "c,only,three\n")
+    assert parse_trace("") == []
+
+
+def test_generator_tenant_labels_change_nothing_else():
+    cat = TraceCategory("philly", "balanced", "train")
+    base = generate_trace(cat, seed=3)
+    multi = generate_trace(cat, seed=3, n_tenants=3)
+    assert len(base) == len(multi)
+    tenants = {j.tenant for j in multi}
+    assert tenants == {"t0", "t1", "t2"}
+    for a, b in zip(base, multi):
+        # every field but the painted-on tenant label is bit-identical
+        assert dataclasses.replace(b, tenant=DEFAULT_TENANT) == a
