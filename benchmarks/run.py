@@ -13,7 +13,8 @@ from benchmarks import (ckpt_bench, cluster_bench, drain_costs,
                         fig7_train_fifo, fig8_mixed_backfill,
                         fig9_placement, fig10_transport,
                         fig11_allreduce_bw, grad_sync_bench,
-                        kernel_bench, roofline, table1_workloads)
+                        kernel_bench, roofline, sched_bench,
+                        table1_workloads)
 
 MODULES = [
     ("table1_workloads", table1_workloads),
@@ -29,6 +30,7 @@ MODULES = [
     ("elastic_bench", elastic_bench),
     ("cluster_bench", cluster_bench),
     ("fault_bench", fault_bench),
+    ("sched_bench", sched_bench),
     ("kernel_bench", kernel_bench),
     ("roofline", roofline),
 ]

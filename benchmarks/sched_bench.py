@@ -1,0 +1,185 @@
+"""Scheduling bake-off at fleet scale -> ``BENCH_sched.json``.
+
+Fig. 7/8-style policy matrix over (policy, trace) cells:
+
+- **policies**: FM one-to-many (paper default), FM with
+  fragmentation-aware placement (``placement="frag_aware"``,
+  arXiv 2512.16099 / 2511.18906 scoring), each under FIFO and
+  aggressive backfilling; DM and SM under FIFO as the incumbent
+  baselines;
+- **traces**: the paper's philly/helios figure traces
+  (:func:`repro.core.traces.generate_trace`) plus synthetic
+  fleet-scale traces (:func:`repro.core.traces.generate_fleet_trace`:
+  heavy-tailed Pareto interarrivals, mixed train+serve, multi-tenant
+  labels) at 16x the figure host count.
+
+Each cell reports makespan / avg JCT / avg wait / fragmentation
+(time-averaged stranded-fragment score, the quantity frag-aware
+placement minimizes) / utilization, plus simulator throughput
+(events/sec).  The fleet section carries the simulator-scale tripwire:
+a >= 1M-event trace must simulate inside ``FLEET_BUDGET_S`` wall-clock
+— quick mode includes it, so CI catches superlinear regressions in the
+event loop, not just correctness bugs.
+
+Usage: ``python -m benchmarks.sched_bench [--quick] [--out PATH]``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List, Optional, Tuple
+
+from benchmarks.common import emit
+from repro.core.simulator import simulate
+from repro.core.traces import (TraceCategory, generate_fleet_trace,
+                               generate_trace)
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_sched.json")
+
+# (cell name, simulate kwargs).  SM only supports sizes <= 4, which the
+# figure traces guarantee via max_size=4; fleet traces go up to size 8,
+# so the fleet section restricts itself to the FM cells.
+CELLS: Tuple[Tuple[str, Dict[str, str]], ...] = (
+    ("fm/fifo", {"mode": "FM", "policy": "fifo"}),
+    ("fm/backfill", {"mode": "FM", "policy": "backfill"}),
+    ("fm-frag/fifo", {"mode": "FM", "policy": "fifo",
+                      "placement": "frag_aware"}),
+    ("fm-frag/backfill", {"mode": "FM", "policy": "backfill",
+                          "placement": "frag_aware"}),
+    ("dm/fifo", {"mode": "DM", "policy": "fifo"}),
+    ("sm/fifo", {"mode": "SM", "policy": "fifo"}),
+)
+FLEET_CELLS = ("fm/fifo", "fm/backfill", "fm-frag/fifo",
+               "fm-frag/backfill")
+
+# figure-trace families: (name, source, seed)
+FAMILIES: Tuple[Tuple[str, str, int], ...] = (
+    ("philly", "philly", 7),
+    ("helios_earth", "helios_earth", 7),
+)
+
+N_HOSTS = 4                 # bake-off table hosts (host choice matters)
+FLEET_N_HOSTS = 64          # 16x the figure scale
+FLEET_N_JOBS = 20_000       # per fleet policy cell
+FLEET_SEED = 11
+TRIPWIRE_N_JOBS = 500_000   # >= 1M events (arrival+finish per job)
+TRIPWIRE_N_HOSTS = 32
+FLEET_BUDGET_S = 240.0      # CI wall-clock budget for the tripwire
+
+
+def _run_cell(jobs, spec: Dict[str, str], n_hosts: int) -> Dict[str, float]:
+    kw = dict(spec)
+    mode = kw.pop("mode")
+    t0 = time.perf_counter()
+    res = simulate(jobs, mode, n_hosts=n_hosts, **kw)
+    wall = time.perf_counter() - t0
+    return {
+        "makespan_s": res.makespan,
+        "avg_jct_s": res.avg_jct,
+        "avg_wait_s": res.avg_wait,
+        "avg_frag_slices": res.avg_frag_slices,
+        "frag_slice_seconds": res.frag_slice_seconds,
+        "utilization": res.utilization,
+        "n_jobs": res.n_jobs,
+        "n_completed": len(res.jct_by_job),
+        "n_events": res.n_events,
+        "events_per_s": res.n_events / wall if wall > 0 else 0.0,
+        "wall_s": wall,
+    }
+
+
+def run(quick: bool = False) -> dict:
+    double = not quick
+    table: Dict[str, Dict[str, Dict[str, float]]] = {}
+    for family, source, seed in FAMILIES:
+        cat = TraceCategory(source, "balanced", "mixed")
+        jobs = generate_trace(cat, seed=seed, double=double, max_size=4)
+        table[family] = {name: _run_cell(jobs, spec, N_HOSTS)
+                         for name, spec in CELLS}
+
+    # fleet-scale synthetic family (FM cells only: sizes reach 8)
+    fleet_jobs = generate_fleet_trace(
+        FLEET_N_JOBS if quick else 2 * FLEET_N_JOBS, seed=FLEET_SEED,
+        mean_interarrival=10.0)
+    fleet_table = {name: _run_cell(fleet_jobs, spec, FLEET_N_HOSTS)
+                   for name, spec in CELLS if name in FLEET_CELLS}
+    table["fleet"] = fleet_table
+
+    # simulator-throughput tripwire: >= 1M events under the CI budget.
+    # This is the guard on the event-loop hardening — before it, this
+    # trace took ~30 minutes (572 events/s and degrading); hardened it
+    # runs in ~35 s (~30k events/s, flat in trace length).
+    trip_jobs = generate_fleet_trace(TRIPWIRE_N_JOBS, seed=FLEET_SEED)
+    trip = _run_cell(trip_jobs, {"mode": "FM", "policy": "fifo"},
+                     TRIPWIRE_N_HOSTS)
+
+    frag_beats_fifo = {
+        family: (cells["fm-frag/fifo"]["avg_frag_slices"]
+                 < cells["fm/fifo"]["avg_frag_slices"])
+        for family, cells in table.items()
+    }
+    all_complete = all(c["n_completed"] == c["n_jobs"]
+                      for cells in table.values() for c in cells.values())
+    acceptance = {
+        # frag-aware placement must beat default FM on the fragmentation
+        # metric it optimizes for at least one trace family
+        "frag_aware_beats_fifo_somewhere": any(frag_beats_fifo.values()),
+        "all_jobs_complete": all_complete,
+        "tripwire_ge_1m_events": trip["n_events"] >= 1_000_000,
+        "tripwire_all_complete": trip["n_completed"] == trip["n_jobs"],
+        "tripwire_under_budget": trip["wall_s"] <= FLEET_BUDGET_S,
+    }
+    return {
+        "matrix": {
+            "cells": [name for name, _ in CELLS],
+            "fleet_cells": list(FLEET_CELLS),
+            "families": [f for f, _, _ in FAMILIES] + ["fleet"],
+            "n_hosts": N_HOSTS,
+            "fleet_n_hosts": FLEET_N_HOSTS,
+            "quick": quick,
+        },
+        "table": table,
+        "fleet": {
+            "tripwire": trip,
+            "tripwire_n_jobs": TRIPWIRE_N_JOBS,
+            "tripwire_n_hosts": TRIPWIRE_N_HOSTS,
+            "budget_s": FLEET_BUDGET_S,
+            "frag_beats_fifo_by_family": frag_beats_fifo,
+        },
+        "acceptance": acceptance,
+    }
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller figure traces + one fleet cell size "
+                         "(the CI sched-bakeoff configuration)")
+    ap.add_argument("--out", default=OUT)
+    args = ap.parse_args(argv)
+    out = run(quick=args.quick)
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+        f.write("\n")
+    for family, cells in out["table"].items():
+        for name, c in cells.items():
+            emit(f"sched_{family}_{name}", c["wall_s"] * 1e6,
+                 f"makespan={c['makespan_s']:.0f};"
+                 f"jct={c['avg_jct_s']:.0f};"
+                 f"wait={c['avg_wait_s']:.0f};"
+                 f"frag={c['avg_frag_slices']:.2f};"
+                 f"util={c['utilization']:.3f};"
+                 f"ev_s={c['events_per_s']:.0f}")
+    trip = out["fleet"]["tripwire"]
+    emit("sched_fleet_tripwire", trip["wall_s"] * 1e6,
+         f"events={trip['n_events']};ev_s={trip['events_per_s']:.0f};"
+         f"budget_s={out['fleet']['budget_s']:.0f}")
+    if not all(out["acceptance"].values()):
+        raise SystemExit(f"sched_bench acceptance failed: "
+                         f"{out['acceptance']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -33,6 +33,7 @@ REQUIRED_KEYS = {
     "BENCH_fault.json": ("recovery", "replay", "acceptance"),
     "BENCH_cluster.json": ("pool", "measurements", "cost_model",
                            "replay", "repacks", "acceptance"),
+    "BENCH_sched.json": ("matrix", "table", "fleet", "acceptance"),
 }
 
 

@@ -1,0 +1,106 @@
+#!/usr/bin/env python
+"""Seeded fleet-trace profiling harness for the discrete-event simulator.
+
+Produces the before/after numbers the fleet-scale hardening is judged
+by: wall-clock split into trace-generation vs simulation, simulator
+events/sec, and (``--cprofile``) a per-function breakdown of the
+simulate call — the view that originally surfaced the three superlinear
+hot spots (the per-pass full-queue tier scan, the O(hosts^2 x leaves)
+``choose_host`` rescans, and the dict-tombstone head peeks).
+
+Deterministic by construction: the trace is seeded, so two runs of
+
+    PYTHONPATH=src python scripts/profile_sim.py --n-jobs 32000
+
+simulate the identical event sequence and differences are pure
+machine/implementation speed.  Sweep sizes to see the scaling curve:
+
+    PYTHONPATH=src python scripts/profile_sim.py \
+        --n-jobs 8000 32000 128000 --policy fifo
+"""
+from __future__ import annotations
+
+import argparse
+import cProfile
+import io
+import pstats
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+from repro.core.simulator import simulate          # noqa: E402
+from repro.core.traces import generate_fleet_trace  # noqa: E402
+
+
+def profile_once(n_jobs: int, *, seed: int, n_hosts: int, policy: str,
+                 placement: str, with_cprofile: bool) -> dict:
+    t0 = time.perf_counter()
+    jobs = generate_fleet_trace(n_jobs, seed=seed)
+    t_gen = time.perf_counter() - t0
+
+    prof = cProfile.Profile() if with_cprofile else None
+    t0 = time.perf_counter()
+    if prof:
+        prof.enable()
+    res = simulate(jobs, "FM", n_hosts=n_hosts, policy=policy,
+                   placement=placement)
+    if prof:
+        prof.disable()
+    t_sim = time.perf_counter() - t0
+
+    row = {
+        "n_jobs": n_jobs,
+        "gen_s": t_gen,
+        "sim_s": t_sim,
+        "n_events": res.n_events,
+        "events_per_s": res.n_events / t_sim if t_sim > 0 else 0.0,
+        "completed": len(res.jct_by_job),
+        "makespan_s": res.makespan,
+        "avg_frag_slices": res.avg_frag_slices,
+    }
+    if prof:
+        buf = io.StringIO()
+        pstats.Stats(prof, stream=buf).sort_stats("cumulative") \
+            .print_stats(25)
+        row["cprofile"] = buf.getvalue()
+    return row
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n-jobs", type=int, nargs="+",
+                    default=[8000, 32000])
+    ap.add_argument("--seed", type=int, default=11)
+    ap.add_argument("--n-hosts", type=int, default=32)
+    ap.add_argument("--policy", default="fifo",
+                    choices=("fifo", "backfill"))
+    ap.add_argument("--placement", default="default",
+                    choices=("default", "frag_aware"))
+    ap.add_argument("--cprofile", action="store_true",
+                    help="attach cProfile to the simulate call and "
+                         "print the top-25 cumulative breakdown")
+    args = ap.parse_args(argv)
+
+    print(f"# fleet profile: hosts={args.n_hosts} policy={args.policy} "
+          f"placement={args.placement} seed={args.seed}")
+    print(f"{'n_jobs':>9} {'gen_s':>7} {'sim_s':>8} {'events':>9} "
+          f"{'events/s':>9} {'frag':>7}")
+    for n in args.n_jobs:
+        row = profile_once(n, seed=args.seed, n_hosts=args.n_hosts,
+                           policy=args.policy, placement=args.placement,
+                           with_cprofile=args.cprofile)
+        print(f"{row['n_jobs']:>9} {row['gen_s']:>7.2f} "
+              f"{row['sim_s']:>8.2f} {row['n_events']:>9} "
+              f"{row['events_per_s']:>9.0f} "
+              f"{row['avg_frag_slices']:>7.2f}")
+        if row["completed"] != n:
+            print(f"  WARNING: only {row['completed']}/{n} jobs "
+                  f"completed", file=sys.stderr)
+        if args.cprofile:
+            print(row["cprofile"])
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

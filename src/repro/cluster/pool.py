@@ -17,7 +17,12 @@ Two strategies mirror :func:`repro.core.policy.cluster_placement`:
   emptiest hosts first;
 - ``packed`` minimizes host span (fills the fullest hosts first), the
   shape defrag repacks squeeze victims into and the single-host SLA
-  tier requires (``require_span=1``).
+  tier requires (``require_span=1``);
+- ``frag_aware`` scores every feasible (span, host set) by the
+  demand-weighted stranded-fragment measure
+  (:func:`repro.core.policy.stranded_frag`) summed over the touched
+  hosts' post-placement free counts, and takes the minimum — the
+  host-granularity analogue of the leaf-level frag-aware placement.
 
 The pool also answers the two scheduling questions that drive repacks:
 :meth:`fragmented_for` — is a job blocked *only* by fragmentation (free
@@ -28,6 +33,8 @@ from __future__ import annotations
 
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.policy import DEFAULT_FRAG_DEMAND, stranded_frag
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,7 +106,50 @@ class DevicePool:
                  if size % s == 0 and size // s <= self.devices_per_host]
         if strategy == "round_robin":
             return sorted(spans, reverse=True)       # widest split first
-        return spans                                 # packed: narrowest
+        return spans                                 # packed/frag: narrow
+
+    def _plan_frag_aware(self, size: int, require_span: Optional[int],
+                         free: List[List[int]]
+                         ) -> Optional[Tuple[Tuple[int, ...],
+                                             Tuple[int, int]]]:
+        """Exact argmin of post-placement stranded fragmentation.
+
+        Per-host fragmentation is independent, so for a fixed span the
+        optimal host set picks the ``span`` hosts with the smallest
+        fragmentation *delta* ``F(free - per) - F(free)``; spans then
+        compare by total delta (untouched hosts contribute zero).
+        Deterministic tie-breaks: per host ``(delta, leftover free,
+        host id)``; across spans lowest total delta wins, ties to the
+        NARROWEST span (fewest hosts perturbed — the consolidation-
+        leaning choice, matching defrag's packed bias).
+        """
+        best = None          # (total_delta, span, hosts, per)
+        for span in self._spans(size, "frag_aware"):
+            if require_span is not None and span != require_span:
+                continue
+            per = size // span
+            scored = []
+            for h in range(self.n_hosts):
+                if len(free[h]) < per:
+                    continue
+                left = len(free[h]) - per
+                delta = (stranded_frag(left, DEFAULT_FRAG_DEMAND)
+                         - stranded_frag(len(free[h]),
+                                         DEFAULT_FRAG_DEMAND))
+                scored.append((delta, left, h))
+            if len(scored) < span:
+                continue
+            scored.sort()
+            take = scored[:span]
+            total = sum(s[0] for s in take)
+            hosts = sorted(s[2] for s in take)
+            if best is None or total < best[0]:
+                best = (total, span, hosts, per)
+        if best is None:
+            return None
+        _, span, hosts, per = best
+        devices = tuple(sorted(d for h in hosts for d in free[h][:per]))
+        return devices, (span, per)
 
     def plan(self, size: int, *, strategy: str = "round_robin",
              require_span: Optional[int] = None,
@@ -109,12 +159,14 @@ class DevicePool:
         None.  Deterministic: host choice is by free-count then index
         (emptiest-first for ``round_robin``, fullest-first for
         ``packed``), devices lowest-id-first within a host."""
-        if strategy not in ("round_robin", "packed"):
+        if strategy not in ("round_robin", "packed", "frag_aware"):
             raise PoolError(f"unknown placement strategy {strategy!r}")
         if size < 1:
             raise PoolError(f"job width must be >= 1, got {size}")
         if free is None:
             free = self.free_by_host()
+        if strategy == "frag_aware":
+            return self._plan_frag_aware(size, require_span, free)
         for span in self._spans(size, strategy):
             if require_span is not None and span != require_span:
                 continue

@@ -99,6 +99,7 @@ class ClusterRuntime:
                  scheduler: Optional[Scheduler] = None,
                  rebalance: bool = True,
                  defrag: bool = True,
+                 frag_aware: bool = False,
                  manager_factory=JobManager,
                  max_restarts: int = 2,
                  fault_plans: Optional[Dict[str, FaultPlan]] = None,
@@ -120,6 +121,9 @@ class ClusterRuntime:
         self.scheduler = scheduler or Scheduler("backfill", depth=8)
         self.rebalance = rebalance
         self.defrag = defrag
+        # frag-aware placement scoring (policy.cluster_placement);
+        # strictly opt-in: default False keeps every golden identical
+        self.frag_aware = frag_aware
         self.manager_factory = manager_factory
         self.max_restarts = max_restarts
         self.fault_env = (plans_to_env(fault_plans)
@@ -163,7 +167,8 @@ class ClusterRuntime:
 
     def _placement_of(self, job) -> Tuple[str, Optional[int]]:
         return cluster_placement(job.priority_tier, job.size,
-                                 self.pool.devices_per_host)
+                                 self.pool.devices_per_host,
+                                 frag_aware=self.frag_aware)
 
     def _start(self, job, devices, shape) -> None:
         jid = job.job_id

@@ -168,6 +168,16 @@ class Cluster:
     """A multi-tenant cluster: hosts x GPUs (paper testbed: 1 host, 2 GPUs).
 
     Scales to arbitrary host/GPU counts for the 1000-node experiments.
+
+    Fleet-scale accounting: the cluster keeps per-host idle-leaf counts
+    and idle/free slice totals as an incrementally-maintained cache so
+    the scheduler hot path (host choice, idle-slice sums) is O(hosts)
+    instead of O(hosts x GPUs x leaves) per query.  Busy flips MUST go
+    through :meth:`mark_busy` / :meth:`mark_idle` (the operation modes
+    do); structural changes (partitioning, repartition) call
+    :meth:`invalidate_cache`, and the cache rebuilds lazily on next
+    query.  Standalone :class:`GPUState` mutation in tests never touches
+    a cluster, so it cannot go stale.
     """
     n_hosts: int = 1
     gpus_per_host: int = 2
@@ -180,6 +190,69 @@ class Cluster:
             for h in range(self.n_hosts):
                 for g in range(self.gpus_per_host):
                     self.gpus[(h, g)] = GPUState(host_id=h, gpu_id=g)
+        self._cache_dirty = True
+        self._idle_by_host: List[int] = []
+        self._idle_sm_total = 0
+        self._free_compute_total = 0
+
+    # ------------------------------------------------ idle-leaf accounting
+    def invalidate_cache(self) -> None:
+        """Structural change (instances created/destroyed/re-laid-out):
+        drop the idle accounting; it rebuilds on next query."""
+        self._cache_dirty = True
+
+    def _ensure_cache(self) -> None:
+        if not self._cache_dirty:
+            return
+        by_host = [0] * self.n_hosts
+        sm_total = 0
+        free_compute = 0
+        for (h, _), gpu in self.gpus.items():
+            free_compute += gpu.free_compute_slices()
+            for inst in gpu.instances:
+                if not inst.busy:
+                    by_host[h] += 1
+                    sm_total += PROFILES[inst.profile].sm_slices
+        self._idle_by_host = by_host
+        self._idle_sm_total = sm_total
+        self._free_compute_total = free_compute
+        self._cache_dirty = False
+
+    def mark_busy(self, inst: Instance, job_id: str) -> None:
+        """Bind ``inst`` to a job, maintaining the idle accounting."""
+        was_idle = not inst.busy
+        inst.job_id = job_id
+        if was_idle and not self._cache_dirty:
+            self._idle_by_host[inst.host_id] -= 1
+            self._idle_sm_total -= PROFILES[inst.profile].sm_slices
+
+    def mark_idle(self, inst: Instance) -> None:
+        """Release ``inst``, maintaining the idle accounting."""
+        was_busy = inst.busy
+        inst.job_id = None
+        if was_busy and not self._cache_dirty:
+            self._idle_by_host[inst.host_id] += 1
+            self._idle_sm_total += PROFILES[inst.profile].sm_slices
+
+    def idle_leaf_count(self, host: int) -> int:
+        self._ensure_cache()
+        return self._idle_by_host[host]
+
+    def idle_leaf_counts(self) -> List[int]:
+        """Idle leaves per host (do not mutate the returned list)."""
+        self._ensure_cache()
+        return self._idle_by_host
+
+    def idle_sm_slices(self) -> int:
+        """Total compute slices held by idle instances."""
+        self._ensure_cache()
+        return self._idle_sm_total
+
+    def free_compute_total(self) -> int:
+        """Total un-partitioned compute slices (no instance over them).
+        Changes only on structural ops, never on busy flips."""
+        self._ensure_cache()
+        return self._free_compute_total
 
     def next_uuid(self) -> str:
         self._uuid_counter += 1
@@ -203,6 +276,7 @@ class Cluster:
             assert not gpu.instances
             for prof in ordered:
                 gpu.create_instance(prof, self.next_uuid())
+        self.invalidate_cache()
 
     def idle_instances(self, host: Optional[int] = None,
                        profile: Optional[str] = None) -> List[Instance]:

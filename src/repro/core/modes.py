@@ -64,40 +64,65 @@ class OperationMode:
 
     def release(self, placement: Placement, cluster: Cluster) -> None:
         for inst in placement.instances:
-            inst.job_id = None
+            cluster.mark_idle(inst)
         if self.name == "DM":
             # dynamic mode tears idle instances down lazily at next place
             pass
 
     # helper -----------------------------------------------------------
     @staticmethod
-    def _bind(placement: Placement, job: Job) -> Placement:
+    def _bind(placement: Placement, job: Job,
+              cluster: Cluster) -> Placement:
+        # busy flips go through the cluster so its O(hosts) idle-leaf
+        # accounting stays exact (see Cluster.mark_busy)
         for inst in placement.instances:
-            inst.job_id = job.job_id
+            cluster.mark_busy(inst, job.job_id)
         return placement
 
 
 class FlexMIG(OperationMode):
-    """One-to-many over fixed minimal leaves (the paper's system)."""
+    """One-to-many over fixed minimal leaves (the paper's system).
+
+    ``placement`` selects the host/leaf scoring: ``"default"`` is the
+    paper's policy (most-idle host, round-robin leaves per Fig. 9);
+    ``"frag_aware"`` scores candidates by the idle fragments they
+    strand and takes the minimum-fragmentation feasible one
+    (policy.frag_aware_choose_host / frag_aware_select_instances).
+    """
     name = "FM"
     one_to_many = True
 
-    def __init__(self, *, round_robin: bool = True):
+    PLACEMENTS = ("default", "frag_aware")
+
+    def __init__(self, *, round_robin: bool = True,
+                 placement: str = "default"):
+        if placement not in self.PLACEMENTS:
+            raise ValueError(f"unknown FM placement {placement!r}; "
+                             f"one of {self.PLACEMENTS}")
         self.round_robin = round_robin
+        self.placement = placement
 
     def setup(self, cluster: Cluster) -> None:
         cluster.partition_all(FLEXMIG_PARTITION)
 
     def try_place(self, job: Job, cluster: Cluster) -> PlaceResult:
-        host = policy.choose_host(cluster, job.size)
-        if host is None:
-            return None
-        chosen = policy.select_instances(cluster, host, job.size,
-                                         round_robin=self.round_robin)
+        if self.placement == "frag_aware":
+            host = policy.frag_aware_choose_host(cluster, job.size)
+            if host is None:
+                return None
+            chosen = policy.frag_aware_select_instances(cluster, host,
+                                                        job.size)
+        else:
+            host = policy.choose_host(cluster, job.size)
+            if host is None:
+                return None
+            chosen = policy.select_instances(cluster, host, job.size,
+                                             round_robin=self.round_robin)
         if chosen is None:
             return None
         transport = "NONE" if job.size == 1 else "SHM"
-        return self._bind(Placement(job.job_id, chosen, transport), job)
+        return self._bind(Placement(job.job_id, chosen, transport), job,
+                          cluster)
 
 
 class StaticMIG(OperationMode):
@@ -122,7 +147,7 @@ class StaticMIG(OperationMode):
         candidates.sort(key=lambda i: order[i.profile])
         inst = candidates[0]
         pl = Placement(job.job_id, [inst], "NONE", one_to_one=True)
-        return self._bind(pl, job)
+        return self._bind(pl, job, cluster)
 
 
 class DynamicMIG(OperationMode):
@@ -141,7 +166,7 @@ class DynamicMIG(OperationMode):
             if cluster.gpus[(inst.host_id, inst.gpu_id)].draining:
                 continue
             pl = Placement(job.job_id, [inst], "NONE", one_to_one=True)
-            return self._bind(pl, job)
+            return self._bind(pl, job, cluster)
         # 2. any geometry change is a mig-manager reconfigure (C4).  Prefer
         # a GPU with no running jobs (reconfig latency only, no
         # suspend/resume), else drain one whose running jobs can coexist
@@ -167,8 +192,9 @@ class DynamicMIG(OperationMode):
         gpu = cluster.gpus[(plan.host_id, plan.gpu_id)]
         profile = round_up_profile(plan.job.size)
         inst = gpu.repartition_for(profile, _uuid(cluster))
+        cluster.invalidate_cache()   # structural: instances re-laid-out
         pl = Placement(plan.job.job_id, [inst], "NONE", one_to_one=True)
-        return self._bind(pl, plan.job)
+        return self._bind(pl, plan.job, cluster)
 
     # inference jobs cannot be drained (service interruption, §5.1)
     _inference_jobs: set = set()

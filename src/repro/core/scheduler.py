@@ -12,30 +12,81 @@ highest tier first.  Both are strictly opt-in — without quotas and with
 all jobs on the default tier, ``candidates`` returns exactly what it
 always returned (the ordering sort is stable), so every existing golden
 replay is bit-identical.
+
+Fleet-scale hardening: the queue used to be a bare list, making
+``remove`` O(queue) and the all-default-tier check in ``candidates`` an
+O(queue) scan *per scheduling pass* — together the dominant superlinear
+term on million-event traces (measured: 60% of wall-clock at 8k jobs,
+growing with queue depth).  The queue is now an insertion-ordered dict
+keyed by ``job_id`` (O(1) push/remove, same iteration order as the list
+it replaces) carrying a live count of non-default-tier members, so the
+single-tier fast path peeks only ``depth`` jobs per pass.  Candidate
+*order* is unchanged in every case.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, List, Mapping, Optional
+import itertools
+from collections import OrderedDict
+from typing import Dict, Iterator, List, Mapping, Optional
 
 from repro.core.job import TIER_NORMAL, Job
 
 
-@dataclasses.dataclass
 class WaitQueue:
-    jobs: List[Job] = dataclasses.field(default_factory=list)
+    """FIFO-ordered wait queue with O(1) push/remove.
+
+    Iteration order is insertion (submission) order, exactly as the
+    plain-list implementation it replaced.  ``jobs`` materializes that
+    order as a list for callers that want a snapshot (the cluster
+    runtime's introspection paths); hot paths iterate instead.
+    """
+
+    def __init__(self, jobs: Optional[List[Job]] = None):
+        # OrderedDict, not dict: FIFO drains delete from the FRONT, and
+        # a plain dict's iteration then re-skips the dead leading slots
+        # on every head() peek until a resize compacts them — measured
+        # superlinear (15us/peek at 64k jobs).  OrderedDict's linked
+        # list makes head access O(1) regardless of deletion history.
+        self._jobs: "OrderedDict[str, Job]" = OrderedDict()
+        self._n_special = 0           # members not on TIER_NORMAL
+        for j in jobs or ():
+            self.push(j)
+
+    @property
+    def jobs(self) -> List[Job]:
+        return list(self._jobs.values())
+
+    @property
+    def has_special_tiers(self) -> bool:
+        return self._n_special > 0
 
     def push(self, job: Job) -> None:
-        self.jobs.append(job)
+        if job.job_id in self._jobs:
+            raise ValueError(f"{job.job_id} already queued")
+        self._jobs[job.job_id] = job
+        if job.priority_tier != TIER_NORMAL:
+            self._n_special += 1
 
     def remove(self, job: Job) -> None:
-        self.jobs.remove(job)
+        if job.job_id not in self._jobs:
+            raise ValueError(f"{job.job_id} not in queue")
+        del self._jobs[job.job_id]
+        if job.priority_tier != TIER_NORMAL:
+            self._n_special -= 1
+
+    def head(self, n: int) -> List[Job]:
+        """First ``n`` jobs in queue order without materializing the
+        whole queue (the single-tier scheduling fast path)."""
+        return list(itertools.islice(self._jobs.values(), n))
+
+    def __iter__(self) -> Iterator[Job]:
+        return iter(self._jobs.values())
 
     def __len__(self) -> int:
-        return len(self.jobs)
+        return len(self._jobs)
 
     def __bool__(self) -> bool:
-        return bool(self.jobs)
+        return bool(self._jobs)
 
 
 class Scheduler:
@@ -67,15 +118,20 @@ class Scheduler:
                    usage: Optional[Mapping[str, int]] = None) -> List[Job]:
         if not queue:
             return []
-        jobs = queue.jobs
-        if usage is not None and self.quotas:
-            jobs = [j for j in jobs if self.admissible(j, usage)]
+        limit = 1 if self.policy == "fifo" else self.depth
+        if usage is None or not self.quotas:
+            # single-tier fast path: no full-queue scan.  With special
+            # tiers present the sort must see the whole queue; it is
+            # stable, so the all-default-tier outcome is unchanged (and
+            # sorting an all-normal queue is the identity — the tier
+            # counter only short-circuits the cost, never the order).
+            if not queue.has_special_tiers:
+                return queue.head(limit)
+            jobs = sorted(queue, key=lambda j: j.priority_tier)
+            return jobs[:limit]
+        jobs = [j for j in queue if self.admissible(j, usage)]
         # highest priority tier first; stable, so the all-default-tier
-        # case preserves submission order exactly (goldens unchanged) —
-        # and skips the sort entirely, keeping the common single-tier
-        # replay path at its original slice cost
+        # case preserves submission order exactly (goldens unchanged)
         if any(j.priority_tier != TIER_NORMAL for j in jobs):
             jobs = sorted(jobs, key=lambda j: j.priority_tier)
-        if self.policy == "fifo":
-            return jobs[:1]
-        return jobs[:self.depth]
+        return jobs[:limit]

@@ -190,6 +190,30 @@ def test_quota_smaller_than_job_is_a_deadlock(tmp_path):
              scheduler=Scheduler("fifo", quotas={"beta": 2}))
 
 
+def test_frag_aware_runtime_packs_exact_fits(tmp_path):
+    """frag_aware=True routes placement through the pool's frag-aware
+    strategy: a size-4 arrival onto a half-loaded pool takes the
+    exact-fit host instead of the round-robin wide split — and the run
+    still completes every job."""
+    specs = [ClusterJobSpec("a", size=4, n_steps=4, segment_steps=4),
+             ClusterJobSpec("b", size=4, n_steps=2, segment_steps=2,
+                            after="a")]
+    rt, res = _run(specs, tmp_path, frag_aware=True,
+                   rebalance=False)
+    assert set(res.jobs) == {"a", "b"}
+    # every placement was single-host (exact fits: 4 onto 4-device
+    # hosts); default round_robin would have split (2, 2)
+    assert res.jobs["a"].shapes == [(1, 4)]
+    assert res.jobs["b"].shapes == [(1, 4)]
+
+
+def test_frag_aware_default_off_is_unchanged(tmp_path):
+    specs = [ClusterJobSpec("a", size=4, n_steps=2, segment_steps=2)]
+    rt, res = _run(specs, tmp_path)
+    assert rt.frag_aware is False
+    assert res.jobs["a"].shapes == [(2, 2)]     # round-robin wide split
+
+
 def test_spec_validation():
     with pytest.raises(ClusterError, match="duplicate"):
         ClusterRuntime([ClusterJobSpec("a", size=2, n_steps=2),

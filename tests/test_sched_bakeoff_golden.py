@@ -1,0 +1,107 @@
+"""Golden bake-off table: pinned metrics per (policy, trace, seed) cell.
+
+Complements ``test_trace_replay_golden.py`` (which proves the
+pre-existing mode/policy rows stayed bit-identical through the
+fleet-scale simulator hardening): this table pins the full bake-off
+matrix INCLUDING the new fragmentation-aware cells, at the same sizes
+the CI sched-bakeoff job replays, so any change to placement scoring,
+tie-breaking, event ordering or the frag-integral bookkeeping shows up
+as an exact float diff here rather than as a silent re-keying of
+BENCH_sched.json.
+
+Values are ``repr``-exact (full float precision): equality is ==, not
+approx — determinism is the property under test.
+"""
+import pytest
+
+from repro.core.simulator import simulate
+from repro.core.traces import (TraceCategory, generate_fleet_trace,
+                               generate_trace)
+
+# cell -> (mode, simulate kwargs); mirrors benchmarks/sched_bench.py
+CELLS = {
+    "fm/fifo": ("FM", {"policy": "fifo"}),
+    "fm/backfill": ("FM", {"policy": "backfill"}),
+    "fm-frag/fifo": ("FM", {"policy": "fifo",
+                            "placement": "frag_aware"}),
+    "fm-frag/backfill": ("FM", {"policy": "backfill",
+                                "placement": "frag_aware"}),
+    "dm/fifo": ("DM", {"policy": "fifo"}),
+    "sm/fifo": ("SM", {"policy": "fifo"}),
+}
+
+N_HOSTS = {"philly": 4, "helios_earth": 4, "fleet": 8}
+
+# (family, cell, seed) -> (makespan, avg_jct, avg_wait,
+#                          avg_frag_slices, utilization)
+GOLDEN = {
+    ("philly", "fm/fifo", 7): (6397.242468961668, 1822.8249327580734, 165.65292532576876, 0.9216835582834524, 0.3734419073826111),
+    ("philly", "fm/backfill", 7): (6397.242468961668, 1848.5825394412589, 120.3743497997771, 0.7416110444108294, 0.37520208888625),
+    ("philly", "fm-frag/fifo", 7): (6397.242468961668, 1891.2589782091488, 151.0151877172112, 0.6412191831475204, 0.3876471323870199),
+    ("philly", "fm-frag/backfill", 7): (6397.242468961668, 1874.6214341539205, 125.05375020474041, 0.48572372019032356, 0.3862074387885268),
+    ("philly", "dm/fifo", 7): (7557.35371404094, 1934.7769052604092, 896.9312012003227, 1.9238716517546923, 0.32773294170480505),
+    ("philly", "sm/fifo", 7): (7307.35371404094, 1866.3898084862153, 165.83974272096202, 1.9656974681189823, 0.32130455013424103),
+    ("helios_earth", "fm/fifo", 7): (6397.242468961668, 2097.8084061839204, 196.00907310359435, 0.898253822582491, 0.43214203148472746),
+    ("helios_earth", "fm/backfill", 7): (6397.242468961668, 2112.344874184839, 149.62450739474377, 0.9616826013700223, 0.43339991304802494),
+    ("helios_earth", "fm-frag/fifo", 7): (6397.242468961668, 2140.8903395086213, 173.903667715251, 0.5926652918148275, 0.44415346674375894),
+    ("helios_earth", "fm-frag/backfill", 7): (6397.242468961668, 2140.8903395086213, 141.1943728595582, 0.43033166192778366, 0.44415346674375883),
+    ("helios_earth", "dm/fifo", 7): (7687.35371404094, 2197.31850133484, 1030.983120347518, 1.8474667381004761, 0.3705450063719933),
+    ("helios_earth", "sm/fifo", 7): (7307.35371404094, 2124.4152755283885, 182.05479620159483, 2.152264876521413, 0.37023377511920463),
+    ("fleet", "fm/fifo", 11): (137207.72491053774, 2366.095611250014, 53373.91662586262, 4.05033726969476, 0.8682327119418682),
+    ("fleet", "fm/backfill", 11): (127075.83742739692, 2363.619237888327, 47789.575492012766, 1.8877365348642068, 0.9346894637248205),
+    ("fleet", "fm-frag/fifo", 11): (137266.94918283616, 2417.6444114112046, 53839.755622861456, 2.4489110184019953, 0.8918998231279217),
+    ("fleet", "fm-frag/backfill", 11): (129465.22558664104, 2417.3602999154864, 49812.502310623604, 1.29976354779211, 0.9461805448761064),
+}
+
+
+def _trace(family, seed):
+    if family == "fleet":
+        return generate_fleet_trace(2000, seed=seed,
+                                    mean_interarrival=10.0)
+    return generate_trace(TraceCategory(family, "balanced", "mixed"),
+                          seed=seed, double=False, max_size=4)
+
+
+def _metrics(family, cell, seed):
+    mode, kw = CELLS[cell]
+    res = simulate(_trace(family, seed), mode,
+                   n_hosts=N_HOSTS[family], **kw)
+    return (res.makespan, res.avg_jct, res.avg_wait,
+            res.avg_frag_slices, res.utilization)
+
+
+@pytest.mark.parametrize("family,cell,seed", sorted(GOLDEN))
+def test_bakeoff_cell_golden(family, cell, seed):
+    got = _metrics(family, cell, seed)
+    want = GOLDEN[(family, cell, seed)]
+    assert got == want, (
+        f"({family}, {cell}, seed={seed}) drifted:\n"
+        f"  got  {got!r}\n  want {want!r}\n"
+        f"Placement scoring, tie-breaking and event ordering are pinned "
+        f"— if the change is intentional, regenerate this table.")
+
+
+def test_frag_aware_beats_default_on_fragmentation():
+    """The bake-off's headline acceptance, pinned at golden scale: the
+    frag-aware FIFO cell strands less time-averaged fragmentation than
+    default FM FIFO on every family in the table."""
+    fams = {f for f, _, _ in GOLDEN}
+    for fam in fams:
+        seed = 11 if fam == "fleet" else 7
+        frag = GOLDEN[(fam, "fm-frag/fifo", seed)][3]
+        base = GOLDEN[(fam, "fm/fifo", seed)][3]
+        assert frag < base, (fam, frag, base)
+
+
+def test_double_run_bit_identical():
+    """Same (policy, trace, seed) twice -> byte-for-byte equal metrics
+    and per-job JCT maps (simulate must not mutate shared state)."""
+    jobs = _trace("philly", 7)
+    a = simulate(jobs, "FM", n_hosts=4, policy="backfill",
+                 placement="frag_aware")
+    b = simulate(jobs, "FM", n_hosts=4, policy="backfill",
+                 placement="frag_aware")
+    assert a.jct_by_job == b.jct_by_job
+    assert a.wait_by_job == b.wait_by_job
+    assert (a.makespan, a.avg_frag_slices, a.n_events) == \
+        (b.makespan, b.avg_frag_slices, b.n_events)
